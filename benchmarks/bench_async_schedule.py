@@ -1,0 +1,109 @@
+"""Paper Figure 1: total train+validate wall time, standard vs Asyncval.
+
+Trains the toy DR producing n checkpoints; validates each with the real
+ValidationPipeline either inline (Fig. 1a) or on the async validator thread
+(Fig. 1b).  Verifies the pipelining law:
+
+    sync_total  ~= sum(train_i) + sum(val_i)
+    async_total ~= sum(train_i) + val_last        (val gap < train gap)
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import jax
+
+from benchmarks.common import Timer, contrastive_step, toy_spec, train_toy_dr
+from repro.ckpt import checkpoint as ckpt
+from repro.core.pipeline import ValidationConfig, ValidationPipeline
+from repro.core.samplers import RunFileTopK
+from repro.core.validator import AsyncValidator
+from repro.data import corpus as corpus_lib
+
+
+def run(n_ckpts: int = 4, steps_per_ckpt: int = 40, corpus_size: int = 1500,
+        n_queries: int = 60, depth: int = 40, seed: int = 0):
+    ds = corpus_lib.synthetic_retrieval_dataset(
+        seed, n_passages=corpus_size, n_queries=n_queries)
+    baseline = corpus_lib.lexical_baseline_run(ds, k=depth)
+    spec = toy_spec(ds.vocab)
+    vcfg = ValidationConfig(metrics=("MRR@10",), k=100, batch_size=128)
+    rows = []
+
+    for mode in ("sync", "async"):
+        workdir = tempfile.mkdtemp(prefix=f"asyncval_{mode}_")
+        ckdir = os.path.join(workdir, "ckpts")
+        pipe = ValidationPipeline(spec, ds.corpus, ds.queries, ds.qrels,
+                                  vcfg, sampler=RunFileTopK(depth=depth),
+                                  baseline_run=baseline)
+        validator = AsyncValidator(ckdir, pipe, poll_interval_s=0.02)
+        t_train, t_val = [], []
+
+        with Timer() as total:
+            if mode == "async":
+                validator.start()
+            params = spec.init(jax.random.PRNGKey(seed))
+            import numpy as np
+            import jax.numpy as jnp
+            step_fn = contrastive_step(spec)
+            rng = np.random.default_rng(seed)
+            qids = sorted(ds.qrels)
+            step = 0
+            for c in range(1, n_ckpts + 1):
+                with Timer() as tt:
+                    for _ in range(steps_per_ckpt):
+                        step += 1
+                        pick = rng.choice(len(qids), size=32)
+                        q_tok = [ds.queries[qids[j]] for j in pick]
+                        p_tok = [ds.corpus[next(iter(ds.qrels[qids[j]]))]
+                                 for j in pick]
+                        qt, qm = corpus_lib.pad_batch(q_tok, spec.q_max_len)
+                        pt, pm = corpus_lib.pad_batch(p_tok, spec.p_max_len)
+                        params, _ = step_fn(
+                            params, {"q_tokens": jnp.asarray(qt),
+                                     "q_mask": jnp.asarray(qm),
+                                     "p_tokens": jnp.asarray(pt),
+                                     "p_mask": jnp.asarray(pm)})
+                    ckpt.save(ckdir, step, {"params": params})
+                t_train.append(tt.seconds)
+                if mode == "sync":
+                    with Timer() as tv:
+                        validator.validate_pending()
+                    t_val.append(tv.seconds)
+            if mode == "async":
+                validator.stop(drain=True)
+        shutil.rmtree(workdir, ignore_errors=True)
+
+        val_total = sum(r.timings["total_s"] for r in validator.results)
+        rows.append({
+            "mode": mode, "total_s": total.seconds,
+            "train_s": sum(t_train), "validate_s": val_total,
+            "n_validated": len(validator.results),
+            "mrr_last": validator.results[-1].metrics["MRR@10"]
+            if validator.results else float("nan"),
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    sync = next(r for r in rows if r["mode"] == "sync")
+    asyn = next(r for r in rows if r["mode"] == "async")
+    speedup = sync["total_s"] / asyn["total_s"]
+    print("name,mode,total_s,train_s,validate_s,n_validated,mrr_last")
+    for r in rows:
+        print(f"async_schedule,{r['mode']},{r['total_s']:.2f},"
+              f"{r['train_s']:.2f},{r['validate_s']:.2f},"
+              f"{r['n_validated']},{r['mrr_last']:.4f}")
+    print(f"async_schedule,speedup,{speedup:.3f},,,,")
+    # pipelining law (paper Fig. 1): async ~ train + last validation
+    assert asyn["total_s"] < sync["total_s"], "async must beat sync"
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Empirical probe: XLA ``cost_analysis()`` counts a scan body ONCE.
+
+This is the measurement behind the dry-run's scan-correction methodology
+(EXPERIMENTS.md §Dry-run note 1): a scanned L-layer MLP reports 1-layer
+FLOPs regardless of L; fully unrolled it reports L x 1-layer.
+
+    PYTHONPATH=src python -m benchmarks.probe_scan_cost
+"""
+
+import os
+
+if "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+
+
+def model(x, w, L, unroll=1):
+    def body(h, wi):
+        return jnp.tanh(h @ wi), None
+    h, _ = jax.lax.scan(body, x, w, unroll=unroll)
+    return h.sum()
+
+
+def main():
+    D = 256
+    x = jax.ShapeDtypeStruct((32, D), jnp.float32)
+    per_layer = 2 * 32 * D * D
+    print(f"analytic per-layer flops: {per_layer:.3e}")
+    rows = []
+    for L in (2, 4, 8):
+        w = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+        c = jax.jit(model, static_argnums=(2,)).lower(x, w, L).compile()
+        f = c.cost_analysis().get("flops", -1.0)
+        rows.append(("scan", L, f))
+        print(f"scan     L={L}  flops={f:.3e}  (ratio to 1 layer: "
+              f"{f/per_layer:.2f})")
+    for L in (2, 4):
+        w = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+        c = jax.jit(model, static_argnums=(2, 3)).lower(x, w, L, L).compile()
+        f = c.cost_analysis().get("flops", -1.0)
+        rows.append(("unrolled", L, f))
+        print(f"unrolled L={L}  flops={f:.3e}  (ratio to 1 layer: "
+              f"{f/per_layer:.2f})")
+    scan_flops = [f for kind, L, f in rows if kind == "scan"]
+    assert max(scan_flops) / min(scan_flops) < 1.01, \
+        "scan flops should be L-independent (counted once)"
+    unr = {L: f for kind, L, f in rows if kind == "unrolled"}
+    assert 1.9 < unr[4] / unr[2] < 2.1, "unrolled flops scale with L"
+    print("confirmed: scan bodies counted once; unrolled counted x trip")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

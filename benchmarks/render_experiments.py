@@ -1,0 +1,131 @@
+"""Render the §Dry-run/§Roofline sections of EXPERIMENTS.md from the
+per-cell JSON records in experiments/dryrun/.
+
+    PYTHONPATH=src python -m benchmarks.render_experiments
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+OUT = "experiments/dryrun"
+PEAK, HBM, ICI = 197e12, 819e9, 50e9
+
+_MOVE = {
+    "compute": ("raise per-device work or cut remat recompute (useful_frac "
+                "{uf:.2f}); MXU-aligned tile shapes"),
+    "memory": ("cut HBM round-trips: bf16 end-to-end, fuse boundary "
+               "copies/transposes, shard the replicated activation dims"),
+    "collective": ("reduce wire bytes: resident weights, hierarchical "
+                   "merges, overlap collectives with compute"),
+}
+
+
+def load(tag="baseline"):
+    recs = {}
+    for p in sorted(glob.glob(os.path.join(OUT, f"*__{tag}.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("ok"):
+            recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def table_rows(recs):
+    lines = ["| arch | shape | bound | comp_ms | mem_ms | memraw_ms | "
+             "coll_ms | GiB/dev | GiB/dev@512 | useful | roofline |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for (a, s), r in sorted(recs.items()):
+        ro = r["roofline"]
+        mp = r.get("memory_multipod_per_device")
+        lines.append(
+            f"| {a} | {s} | {ro['bottleneck']} | {ro['compute_s']*1e3:.2f} "
+            f"| {ro['memory_s']*1e3:.2f} | {ro.get('memory_raw_s',0)*1e3:.2f} "
+            f"| {ro['collective_s']*1e3:.2f} "
+            f"| {r['memory']['per_device_total']/2**30:.2f} "
+            f"| {mp/2**30:.2f} " if mp else "| - "
+        ) if False else lines.append(
+            f"| {a} | {s} | {ro['bottleneck']} | {ro['compute_s']*1e3:.2f} "
+            f"| {ro['memory_s']*1e3:.2f} "
+            f"| {ro.get('memory_raw_s',0)*1e3:.2f} "
+            f"| {ro['collective_s']*1e3:.2f} "
+            f"| {r['memory']['per_device_total']/2**30:.2f} "
+            f"| {(mp/2**30 if mp else 0):.2f} "
+            f"| {ro['useful_flops_frac']:.2f} | {ro['roofline_frac']:.3f} |")
+    return "\n".join(lines)
+
+
+def per_cell_notes(recs):
+    lines = ["### Per-cell §Roofline records", ""]
+    for (a, s), r in sorted(recs.items()):
+        ro = r["roofline"]
+        m = r["meta"]
+        move = _MOVE[ro["bottleneck"]].format(uf=ro["useful_flops_frac"])
+        lines.append(
+            f"* **{a}/{s}** — compute {ro['compute_s']:.4f}s / memory "
+            f"{ro['memory_s']:.4f}s / collective {ro['collective_s']:.4f}s "
+            f"-> **{ro['bottleneck']}-bound**. MODEL_FLOPS "
+            f"{m['model_flops']:.3e} (params {m.get('params',0):.3e}, "
+            f"active {m.get('active_params',0):.3e}); "
+            f"MODEL_FLOPS/HLO_FLOPs = {ro['useful_flops_frac']:.2f}. "
+            f"To move the dominant term: {move}.")
+    return "\n".join(lines)
+
+
+def analysis_text(recs):
+    by_bound = {}
+    for key, r in recs.items():
+        by_bound.setdefault(r["roofline"]["bottleneck"], []).append(key)
+    n = len(recs)
+    fits = sum(1 for r in recs.values()
+               if r["memory"]["per_device_total"] < 16 * 2**30)
+    fits512 = sum(1 for r in recs.values()
+                  if r.get("memory_multipod_per_device", 1e30) < 16 * 2**30)
+    best = max(recs.items(), key=lambda kv: kv[1]["roofline"]["roofline_frac"])
+    lines = [
+        f"Across {n} baseline cells: "
+        + ", ".join(f"{len(v)} {k}-bound" for k, v in sorted(by_bound.items()))
+        + f". {fits}/{n} fit a 16 GiB HBM budget on the single pod; "
+        f"{fits512}/{n} on the 512-chip multi-pod mesh (DP widening halves "
+        "batch-linear buffers).",
+        "",
+        f"Best baseline roofline fraction: **{best[0][0]}/{best[0][1]}** at "
+        f"{best[1]['roofline']['roofline_frac']:.3f} — dense-transformer "
+        "training is the closest to the compute roofline, as expected: its "
+        "arithmetic intensity (6 x params x tokens over params+activations "
+        "traffic) is the highest in the pool.",
+        "",
+        "Structural findings:",
+        "* **Training cells** are memory-term dominated on this metric; the "
+        "biggest single contributor is remat recompute + the layer-boundary "
+        "residual stream (mitigated by sequence parallelism, auto-enabled "
+        "for the large archs).",
+        "* **Decode cells** are intrinsically HBM-bound (one token against "
+        "the full cache+weights per step; arithmetic intensity ~1); their "
+        "collective term is layout-dependent (see §Perf iter b).",
+        "* **GNN/recsys cells** are collective-bound: gather/segment-sum "
+        "message passing and row-sharded embedding lookups place per-step "
+        "all-to-all-like traffic on the wire that small MLP compute never "
+        "amortizes. long-term fix: locality-aware partitioning (METIS-style "
+        "edge cuts) so most messages stay on-device.",
+        "* `long_500k` decode cells run at O(T) per emitted token with the "
+        "cache sequence-sharded over the whole mesh — all five LM archs "
+        "compile and fit (DESIGN.md §2.4 records the decode-only scope).",
+    ]
+    return "\n".join(lines)
+
+
+def main():
+    recs = load()
+    md = open("EXPERIMENTS.md").read()
+    md = md.replace("<!-- ROOFLINE_TABLE -->", table_rows(recs))
+    md = md.replace("<!-- PER_CELL_NOTES -->", per_cell_notes(recs))
+    md = md.replace("<!-- ROOFLINE_ANALYSIS -->", analysis_text(recs))
+    open("EXPERIMENTS.md", "w").write(md)
+    print(f"rendered {len(recs)} cells into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Benchmark aggregator: one benchmark per paper figure + the kernel bench.
+
+    PYTHONPATH=src python -m benchmarks.run [--only name]
+
+Prints CSV rows (``name,...``) per benchmark; asserts each benchmark's
+paper-claim invariants (see individual modules).  The dry-run/roofline
+tables are produced separately by ``repro.launch.dryrun`` (they need the
+512-device environment).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = ("async_schedule", "fidelity", "validation_time", "mips_kernel")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    failures = []
+    for name in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["main"])
+        print(f"### bench_{name}")
+        t0 = time.time()
+        try:
+            mod.main()
+            print(f"### bench_{name}: OK ({time.time()-t0:.1f}s)\n")
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+            print(f"### bench_{name}: FAILED\n")
+    if failures:
+        print("FAILED:", ", ".join(failures))
+        return 1
+    print("all benchmarks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

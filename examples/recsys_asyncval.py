@@ -1,0 +1,126 @@
+"""Asyncval beyond text retrieval: validating a sequential recommender.
+
+bert4rec/sasrec ARE dense retrievers over an item corpus — the
+``retrieval_cand`` serving shape (one user against 1M items) is literally
+the Asyncval validation step. This example trains a small SASRec,
+checkpoints it, and validates every checkpoint with the SAME
+watcher/validator machinery the paper uses for passage retrieval:
+encode the item corpus with the checkpoint's item tower, retrieve top-k
+per held-out user, score MRR@10 against the next-item "qrels".
+
+    PYTHONPATH=src python examples/recsys_asyncval.py
+"""
+
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import checkpoint as ckpt
+from repro.configs import registry
+from repro.core.pipeline import ValidationConfig, ValidationPipeline
+from repro.core.validator import AsyncValidator
+from repro.models import nn
+from repro.models import recsys as rcs
+from repro.models.biencoder import EncoderSpec
+from repro.train import optim
+from repro.train.trainer import Trainer, TrainerConfig
+
+N_ITEMS = 300
+SEQ = 12
+
+
+def make_dataset(seed=0, n_users=400):
+    """Markov-chain item sequences: item i tends to be followed by i+1
+    (mod groups) — learnable next-item structure."""
+    rng = np.random.default_rng(seed)
+    seqs = []
+    for _ in range(n_users):
+        x = [int(rng.integers(1, N_ITEMS))]
+        for _ in range(SEQ):
+            nxt = x[-1] % (N_ITEMS - 1) + 1 if rng.random() < 0.8 \
+                else int(rng.integers(1, N_ITEMS))
+            x.append(nxt)
+        seqs.append(x)
+    return np.asarray(seqs, np.int32)          # (users, SEQ+1)
+
+
+def main():
+    workdir = tempfile.mkdtemp(prefix="recsys_asyncval_")
+    cfg = registry.get("sasrec").smoke_config()
+    cfg = dataclasses.replace(cfg, item_vocab=N_ITEMS, seq_len=SEQ,
+                              n_negatives=64, compute_dtype=jnp.float32)
+    seqs = make_dataset()
+    train_seqs, valid_seqs = seqs[:320], seqs[320:]
+
+    # ----- trainer: produces checkpoints ---------------------------------
+    def batch_for(step):
+        rng = np.random.default_rng(step)
+        pick = rng.choice(len(train_seqs), 32)
+        s = train_seqs[pick]
+        return {"hist": jnp.asarray(s[:, :-1]), "pos": jnp.asarray(s[:, 1:]),
+                "neg_ids": jnp.asarray(rng.integers(1, N_ITEMS, (64,)),
+                                       jnp.int32)}
+
+    params = nn.materialize(rcs.init(jax.random.PRNGKey(0), cfg))
+    ckdir = os.path.join(workdir, "ckpts")
+    trainer = Trainer(TrainerConfig(total_steps=120, ckpt_every=40,
+                                    ckpt_dir=ckdir, async_save=False),
+                      lambda p, b: rcs.loss_fn(p, cfg, b),
+                      optim.adamw(3e-3), params, batch_for)
+
+    # ----- the Asyncval mapping ------------------------------------------
+    # corpus  = item ids (the "passages"); the item tower embeds them.
+    # queries = held-out user histories; the user tower embeds them.
+    # qrels   = the true next item per held-out user.
+    corpus = {f"i{i}": [i] for i in range(1, N_ITEMS)}
+    queries = {f"u{j}": valid_seqs[j, :-1].tolist()
+               for j in range(len(valid_seqs))}
+    qrels = {f"u{j}": {f"i{int(valid_seqs[j, -1])}": 1}
+             for j in range(len(valid_seqs))}
+
+    def encode_items(params, tokens, mask):
+        ids = tokens[:, 0]
+        return rcs.item_embeddings(params, cfg, ids)
+
+    def encode_users(params, tokens, mask):
+        u = rcs.user_embed(params, cfg, tokens, mask)
+        return u / jnp.clip(jnp.linalg.norm(u, axis=-1, keepdims=True), 1e-6)
+
+    spec = EncoderSpec(name="sasrec-dr", dim=cfg.embed_dim,
+                       encode_query=encode_users,
+                       encode_passage=encode_items,
+                       init=lambda rng: rcs.init(rng, cfg),
+                       q_max_len=SEQ, p_max_len=1)
+    pipe = ValidationPipeline(
+        spec, corpus, queries, qrels,
+        ValidationConfig(metrics=("MRR@10", "Recall@100"), k=100,
+                         batch_size=64))
+    validator = AsyncValidator(ckdir, pipe, poll_interval_s=0.05)
+
+    validator.start()
+    trainer.run()
+    validator.stop(drain=True)
+
+    print("[recsys-asyncval] SASRec checkpoints validated as a dense "
+          "retriever over the item corpus:")
+    for r in validator.results:
+        print(f"  step {r.step:>4}: MRR@10={r.metrics['MRR@10']:.4f} "
+              f"Recall@100={r.metrics['Recall@100']:.4f}")
+    first, last = validator.results[0], validator.results[-1]
+    assert last.metrics["MRR@10"] > first.metrics["MRR@10"], \
+        "training should improve next-item retrieval"
+    print("[recsys-asyncval] the paper's technique is architecture-"
+          "agnostic: same watcher/pipeline, different towers.")
+
+
+if __name__ == "__main__":
+    main()

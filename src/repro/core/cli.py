@@ -1,0 +1,170 @@
+"""The paper's command-line surface (§3), JAX-native.
+
+    python -m repro.core.cli \\
+        --query_file q.jsonl --candidate_dir corpus_dir \\
+        --ckpts_dir ckpts/ --qrel_file qrels.txt \\
+        --q_max_len 32 --p_max_len 128 \\
+        --metrics MRR@10 Recall@100 --report_to csv jsonl \\
+        --run_name myrun --write_run --output_dir runs/ \\
+        --max_num_valid 10 --logging_dir logs/ \\
+        --encoder repro.models.biencoder:biencoder_spec_from_cli \\
+        --arch dr-bert-base [--watch]
+
+Differences from the torch original, by design (DESIGN.md §2.2):
+  * ``--encoder`` names a ``module:function`` returning an
+    :class:`~repro.models.biencoder.EncoderSpec` — the pure-function twin
+    of subclassing ``asyncval.modelling.Encoder``; ``--arch`` picks a
+    registry architecture for the default builder.
+  * ``--tokenizer_name_or_path`` is accepted and ignored (corpus/queries
+    are pre-tokenized JSONL exactly as the paper prescribes; no HF here).
+  * ``--report_to tensorboard|wandb`` map to the CSV/JSONL file reporters.
+  * checkpoints are this repo's two-phase-commit directories; ``--watch``
+    keeps polling (the paper's async mode) vs one-shot validate-existing
+    (the paper's single-GPU mode).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import glob
+import importlib
+import os
+import sys
+import time
+from typing import Optional
+
+
+def build_encoder(args):
+    if args.encoder:
+        mod_name, fn_name = args.encoder.split(":")
+        fn = getattr(importlib.import_module(mod_name), fn_name)
+        return fn(args)
+    # default: registry arch wrapped as a bi-encoder
+    from repro.configs import registry
+    from repro.models.biencoder import biencoder_spec
+    arch = registry.get(args.arch)
+    cfg = arch.smoke_config() if args.smoke else arch.full_config()
+    return biencoder_spec(cfg, q_max_len=args.q_max_len,
+                          p_max_len=args.p_max_len)
+
+
+def load_texts(paths):
+    from repro.data.corpus import read_jsonl
+    out = {}
+    for p in paths:
+        out.update(read_jsonl(p))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.core.cli")
+    ap.add_argument("--query_file", nargs="+", required=True)
+    ap.add_argument("--candidate_dir", required=True)
+    ap.add_argument("--ckpts_dir", required=True)
+    ap.add_argument("--tokenizer_name_or_path", default=None,
+                    help="accepted for CLI compatibility; unused "
+                         "(inputs are pre-tokenized)")
+    ap.add_argument("--q_max_len", type=int, default=32)
+    ap.add_argument("--p_max_len", type=int, default=128)
+    ap.add_argument("--qrel_file", required=True)
+    ap.add_argument("--run_name", default="asyncval")
+    ap.add_argument("--write_run", action="store_true")
+    ap.add_argument("--output_dir", default="asyncval_out")
+    ap.add_argument("--max_num_valid", type=int, default=None)
+    ap.add_argument("--logging_dir", default=None)
+    ap.add_argument("--metrics", nargs="+", default=["MRR@10"])
+    ap.add_argument("--report_to", nargs="+", default=["csv"],
+                    choices=["csv", "jsonl", "tensorboard", "wandb"])
+    ap.add_argument("--batch_size", type=int, default=64)
+    ap.add_argument("--fp16", action="store_true",
+                    help="bf16 compute (TPU-native half precision)")
+    ap.add_argument("--mode", default="retrieval",
+                    choices=["retrieval", "rerank", "average_rank"])
+    ap.add_argument("--depth", type=int, default=0,
+                    help="subset depth (0 = full corpus); needs --run_file")
+    ap.add_argument("--run_file", default=None,
+                    help="baseline TREC run for subset sampling")
+    ap.add_argument("--retrieve_k", type=int, default=100)
+    ap.add_argument("--encoder", default=None,
+                    help="module:function -> EncoderSpec")
+    ap.add_argument("--arch", default="dr-bert-base")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--watch", action="store_true",
+                    help="keep polling for new checkpoints (async mode)")
+    ap.add_argument("--poll_interval", type=float, default=5.0)
+    args = ap.parse_args(argv)
+
+    from repro.core.metrics import read_trec_qrels, read_trec_run
+    from repro.core.pipeline import ValidationConfig, ValidationPipeline
+    from repro.core.reporting import CSVLogger, JSONLLogger, MultiLogger
+    from repro.core.samplers import (FullCorpus, QrelPool, RerankTopK,
+                                     RunFileTopK)
+    from repro.core.validator import AsyncValidator
+
+    spec = build_encoder(args)
+    corpus = load_texts(sorted(
+        glob.glob(os.path.join(args.candidate_dir, "*.json*"))))
+    queries = load_texts(args.query_file)
+    qrels = read_trec_qrels(args.qrel_file)
+    print(f"[asyncval] corpus={len(corpus)} queries={len(queries)} "
+          f"qrels={len(qrels)}", file=sys.stderr)
+
+    baseline_run = read_trec_run(args.run_file) if args.run_file else None
+    if args.depth and baseline_run is None:
+        ap.error("--depth needs --run_file")
+    if args.mode == "rerank":
+        sampler = RerankTopK(depth=args.depth or 100)
+    elif args.mode == "average_rank":
+        sampler = QrelPool(pool=args.depth or 30)
+    elif args.depth:
+        sampler = RunFileTopK(depth=args.depth)
+    else:
+        sampler = FullCorpus()
+
+    vcfg = ValidationConfig(metrics=tuple(args.metrics), mode=args.mode,
+                            k=args.retrieve_k, batch_size=args.batch_size,
+                            write_run=args.write_run,
+                            output_dir=args.output_dir,
+                            run_tag=args.run_name)
+    pipe = ValidationPipeline(spec, corpus, queries, qrels, vcfg,
+                              sampler=sampler, baseline_run=baseline_run)
+
+    logdir = args.logging_dir or args.output_dir
+    loggers = []
+    for r in args.report_to:
+        if r in ("csv", "tensorboard"):      # tensorboard -> CSV twin
+            loggers.append(CSVLogger(os.path.join(
+                logdir, f"{args.run_name}_metrics.csv")))
+        else:                                # wandb -> JSONL twin
+            loggers.append(JSONLLogger(os.path.join(
+                logdir, f"{args.run_name}_metrics.jsonl")))
+    validator = AsyncValidator(
+        args.ckpts_dir, pipe, logger=MultiLogger(*loggers),
+        max_num_valid=args.max_num_valid,
+        ledger_path=os.path.join(logdir, f"{args.run_name}_ledger.jsonl"),
+        poll_interval_s=args.poll_interval)
+
+    if args.watch:
+        print("[asyncval] watching", args.ckpts_dir, file=sys.stderr)
+        try:
+            while args.max_num_valid is None \
+                    or len(validator.results) < args.max_num_valid:
+                n = validator.validate_pending()
+                if n:
+                    for r in validator.results[-n:]:
+                        print(f"[asyncval] step {r.step}: {r.metrics} "
+                              f"({r.timings['total_s']:.1f}s)")
+                time.sleep(args.poll_interval)
+        except KeyboardInterrupt:
+            pass
+    else:
+        validator.validate_all_existing()
+        for r in validator.results:
+            print(f"[asyncval] step {r.step}: {r.metrics} "
+                  f"({r.timings['total_s']:.1f}s)")
+    return 0 if not validator.errors else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

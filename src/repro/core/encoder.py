@@ -1,0 +1,71 @@
+"""Distributed corpus encoding — the expensive step Asyncval parallelizes.
+
+The corpus (millions of pre-tokenized passages) is padded into fixed-shape
+batches and pushed through a jit'd ``encode_fn`` whose batch axis is sharded
+over the validator mesh (``("data","model")`` jointly for pure data
+parallelism — encoding has no cross-example dependence).
+
+Straggler mitigation (DESIGN.md §2.8): the corpus is over-decomposed into
+~4x more chunks than workers and scheduled through
+``repro.distributed.fault.WorkQueue`` with speculative re-execution — on this
+CPU box the multi-worker path is exercised by the simulation tests; the
+single-process path below is what examples use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.data.corpus import Tokens, pad_batch
+
+
+@dataclasses.dataclass
+class EncodeStats:
+    n_texts: int
+    n_batches: int
+    wall_time_s: float
+
+
+def encode_texts(encode_fn: Callable, params, texts: Sequence[Tokens], *,
+                 max_len: int, batch_size: int,
+                 donate: bool = False) -> tuple[np.ndarray, EncodeStats]:
+    """Encode a list of token sequences -> (N, D) float32 embeddings.
+
+    ``encode_fn(params, tokens (B,L) int32, mask (B,L) bool) -> (B, D)``.
+    The final ragged batch is padded (and the padding rows dropped), so the
+    jitted function sees exactly one shape — no recompilation.
+    """
+    t0 = time.time()
+    n = len(texts)
+    fn = jax.jit(encode_fn)
+    out: List[np.ndarray] = []
+    n_batches = 0
+    for start in range(0, n, batch_size):
+        chunk = list(texts[start:start + batch_size])
+        real = len(chunk)
+        if real < batch_size:
+            chunk = chunk + [[0]] * (batch_size - real)
+        toks, mask = pad_batch(chunk, max_len)
+        emb = np.asarray(fn(params, toks, mask))
+        out.append(emb[:real])
+        n_batches += 1
+    embs = (np.concatenate(out, axis=0) if out
+            else np.zeros((0, 1), np.float32))
+    return embs, EncodeStats(n_texts=n, n_batches=n_batches,
+                             wall_time_s=time.time() - t0)
+
+
+def encode_corpus_dict(encode_fn, params, corpus: Dict[str, Tokens], *,
+                       max_len: int, batch_size: int,
+                       subset_ids: Optional[Sequence[str]] = None):
+    """Encode (a subset of) a corpus dict -> (ids, embeddings, stats)."""
+    ids = list(subset_ids) if subset_ids is not None else list(corpus)
+    texts = [corpus[i] for i in ids]
+    embs, stats = encode_texts(encode_fn, params, texts,
+                               max_len=max_len, batch_size=batch_size)
+    return ids, embs, stats

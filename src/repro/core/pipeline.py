@@ -1,0 +1,118 @@
+"""ValidationPipeline — the closed loop the paper's users never implement.
+
+One validation of one checkpoint = encode (subset of) corpus + queries with
+the checkpoint's weights, retrieve, score.  Modes:
+
+  * ``retrieval``     — full (or subset) corpus top-k retrieval (paper default)
+  * ``rerank``        — RocketQA-style per-query candidate re-ranking
+  * ``average_rank``  — DPR-style pooled average-rank validation
+
+The corpus subset is computed ONCE (the sampler depends only on the baseline
+run + qrels, not the checkpoint), and the pre-tokenized texts are padded
+once — both costs amortize across checkpoints, exactly as the paper's
+pre-tokenization argument (§3) prescribes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import metrics as metrics_lib
+from repro.core import retrieval as retrieval_lib
+from repro.core.encoder import encode_texts
+from repro.core.samplers import FullCorpus, SubsetResult
+from repro.models.biencoder import EncoderSpec
+
+
+@dataclasses.dataclass
+class ValidationConfig:
+    metrics: tuple = ("MRR@10",)
+    mode: str = "retrieval"          # retrieval | rerank | average_rank
+    k: int = 100                     # retrieval cut-off
+    batch_size: int = 64
+    impl: str = "xla"                # xla | pallas
+    mesh: Any = None                 # optional sharded retrieval mesh
+    write_run: bool = False
+    output_dir: Optional[str] = None
+    run_tag: str = "asyncval"
+
+
+@dataclasses.dataclass
+class ValidationResult:
+    step: int
+    metrics: Dict[str, float]
+    timings: Dict[str, float]
+    subset_size: int
+
+
+class ValidationPipeline:
+    def __init__(self, spec: EncoderSpec, corpus: Dict[str, list],
+                 queries: Dict[str, list], qrels: Dict[str, Dict[str, int]],
+                 vcfg: ValidationConfig, *, sampler=None,
+                 baseline_run: Optional[Dict[str, list]] = None):
+        self.spec = spec
+        self.vcfg = vcfg
+        self.qrels = qrels
+        self.query_ids = list(queries)
+        self.query_texts = [queries[q] for q in self.query_ids]
+        sampler = sampler or FullCorpus()
+        self.sampler_name = sampler.name
+        self.subset: SubsetResult = sampler.sample(list(corpus), baseline_run,
+                                                   qrels)
+        self.doc_ids = self.subset.doc_ids
+        self.doc_texts = [corpus[d] for d in self.doc_ids]
+
+    # -- one checkpoint ----------------------------------------------------
+    def validate_params(self, params, step: int = 0) -> ValidationResult:
+        v = self.vcfg
+        t0 = time.time()
+        c_emb, c_stats = encode_texts(self.spec.encode_passage, params,
+                                      self.doc_texts,
+                                      max_len=self.spec.p_max_len,
+                                      batch_size=v.batch_size)
+        t_corpus = time.time() - t0
+        t0 = time.time()
+        q_emb, _ = encode_texts(self.spec.encode_query, params,
+                                self.query_texts,
+                                max_len=self.spec.q_max_len,
+                                batch_size=v.batch_size)
+        t_query = time.time() - t0
+
+        t0 = time.time()
+        if v.mode in ("rerank", "average_rank") and self.subset.per_query:
+            run, scores = retrieval_lib.rerank_run(
+                self.query_ids, q_emb, self.doc_ids, c_emb,
+                self.subset.per_query, k=max(v.k, 1000))
+        else:
+            run, scores = retrieval_lib.retrieve_run(
+                self.query_ids, q_emb, self.doc_ids, c_emb, k=v.k,
+                impl=v.impl, mesh=v.mesh)
+        t_retrieve = time.time() - t0
+
+        names = list(v.metrics)
+        if v.mode == "average_rank" and "AverageRank" not in names:
+            names.append("AverageRank")
+        m = metrics_lib.compute_metrics(run, self.qrels, names)
+
+        if v.write_run and v.output_dir:
+            import os
+            os.makedirs(v.output_dir, exist_ok=True)
+            metrics_lib.write_trec_run(
+                f"{v.output_dir}/{v.run_tag}_step{step}.trec", run, scores,
+                tag=v.run_tag)
+
+        timings = {"encode_corpus_s": t_corpus, "encode_query_s": t_query,
+                   "retrieve_s": t_retrieve,
+                   "total_s": t_corpus + t_query + t_retrieve}
+        return ValidationResult(step=step, metrics=m, timings=timings,
+                                subset_size=len(self.doc_ids))
+
+
+def params_from_checkpoint(state: Any) -> Any:
+    """Default extractor: trainer saves {"params":..., "opt_state":...}."""
+    return state["params"] if isinstance(state, dict) and "params" in state \
+        else state

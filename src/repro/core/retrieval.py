@@ -1,0 +1,157 @@
+"""Exact MIPS top-k retrieval — the paper's retrieval stage, TPU-native.
+
+Replaces the paper's host-side FAISS flat index: the corpus embedding matrix
+stays device-resident (row-sharded at scale) and retrieval is a blocked
+matmul + running top-k:
+
+  * ``topk_exact``       — single-device: ``lax.scan`` over corpus blocks with
+                           an online top-k merge (XLA path; the Pallas kernel
+                           in ``repro.kernels.topk_mips`` is the TPU-target
+                           implementation of the same loop, selected with
+                           impl="pallas").
+  * ``topk_sharded``     — shard_map over a mesh: corpus rows sharded, local
+                           top-k per shard, hierarchical merge via all_gather
+                           of the k candidates/shard (collective volume
+                           O(devices x k) — negligible vs the scan).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def _merge_topk(scores_a, idx_a, scores_b, idx_b, k: int):
+    """Merge two (Q, ka/kb) candidate sets into (Q, k)."""
+    s = jnp.concatenate([scores_a, scores_b], axis=1)
+    i = jnp.concatenate([idx_a, idx_b], axis=1)
+    top_s, pos = jax.lax.top_k(s, k)
+    return top_s, jnp.take_along_axis(i, pos, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block", "unroll"))
+def topk_exact(q_emb: jnp.ndarray, c_emb: jnp.ndarray, *, k: int,
+               block: int = 4096, unroll: int = 1):
+    """q_emb (Q, D) x c_emb (N, D) -> (scores (Q,k), indices (Q,k)).
+
+    Scans corpus blocks, carrying a running top-k so the full (Q, N) score
+    matrix is never materialized (N can be 10^7)."""
+    Q, D = q_emb.shape
+    N = c_emb.shape[0]
+    k = min(k, N)
+    nb = max(1, min(block, N))
+    n_blocks = -(-N // nb)
+    padN = n_blocks * nb
+    c = jnp.pad(c_emb, ((0, padN - N), (0, 0)))
+    c = c.reshape(n_blocks, nb, D)
+
+    init_s = jnp.full((Q, k), -jnp.inf, jnp.float32)
+    init_i = jnp.zeros((Q, k), jnp.int32)
+
+    def body(carry, inp):
+        run_s, run_i = carry
+        cb, bi = inp
+        s = (q_emb @ cb.T).astype(jnp.float32)               # (Q, nb)
+        base = bi * nb
+        valid = (base + jnp.arange(nb))[None, :] < N
+        s = jnp.where(valid, s, -jnp.inf)
+        kk = min(k, nb)
+        bs, bidx = jax.lax.top_k(s, kk)
+        bidx = bidx + base
+        return _merge_topk(run_s, run_i, bs, bidx.astype(jnp.int32), k), None
+
+    (scores, idx), _ = jax.lax.scan(body, (init_s, init_i),
+                                    (c, jnp.arange(n_blocks)),
+                                    unroll=(n_blocks if unroll <= 0
+                                            else min(unroll, n_blocks)))
+    return scores, idx
+
+
+def topk_sharded(mesh, q_emb, c_emb, *, k: int, axis_names=("data", "model"),
+                 block: int = 4096):
+    """Distributed exact top-k: corpus rows sharded over ``axis_names``.
+
+    Each shard computes a local top-k over its rows (global indices), then a
+    hierarchical merge all-gathers the (k-candidate) lists and reduces.
+    """
+    n_shards = int(np.prod([mesh.shape[a] for a in axis_names]))
+    N = c_emb.shape[0]
+    rows = N // n_shards
+    assert rows * n_shards == N, "corpus rows must divide shards (pad first)"
+    kk = min(k, rows)
+
+    def local(q, c_local):
+        ax = axis_names[0] if len(axis_names) == 1 else axis_names
+        shard_id = jax.lax.axis_index(ax)
+        s, i = topk_exact(q, c_local, k=kk, block=block)
+        i = i + shard_id * rows
+        # hierarchical tree merge, one mesh axis at a time (innermost
+        # first).  A flat 256-way gather moves (n_shards-1) x Q x k
+        # candidate rows per device; two 16-way levels move 2 x 15 x Q x k
+        # -- ~8.5x less wire on the 16x16 mesh (EXPERIMENTS.md §Perf).
+        for merge_ax in reversed(axis_names):
+            all_s = jax.lax.all_gather(s, merge_ax, axis=0, tiled=False)
+            all_i = jax.lax.all_gather(i, merge_ax, axis=0, tiled=False)
+            Sn = all_s.shape[0] * all_s.shape[2]
+            flat_s = jnp.moveaxis(all_s, 0, 1).reshape(q.shape[0], Sn)
+            flat_i = jnp.moveaxis(all_i, 0, 1).reshape(q.shape[0], Sn)
+            s, pos = jax.lax.top_k(flat_s, min(k, Sn))
+            i = jnp.take_along_axis(flat_i, pos, axis=1)
+        return s, i
+
+    spec_c = P(axis_names if len(axis_names) > 1 else axis_names[0])
+    # check_vma=False: the inner lax.scan carry starts replicated and
+    # becomes device-varying after the first block — a legal pattern the
+    # varying-manual-axes checker can't type; outputs are re-replicated by
+    # the final merge anyway.
+    fn = jax.shard_map(local, mesh=mesh,
+                       in_specs=(P(), spec_c),
+                       out_specs=(P(), P()), check_vma=False)
+    return fn(q_emb, c_emb)
+
+
+def retrieve_run(query_ids, q_emb, doc_ids, c_emb, *, k: int,
+                 impl: str = "xla", mesh=None, block: int = 4096):
+    """Build a {qid: [docid...]} run (+scores) from embeddings."""
+    if impl == "pallas":
+        from repro.kernels.topk_mips import ops as mips_ops
+        scores, idx = mips_ops.topk_mips(jnp.asarray(q_emb),
+                                         jnp.asarray(c_emb), k=k)
+    elif mesh is not None:
+        scores, idx = topk_sharded(mesh, jnp.asarray(q_emb),
+                                   jnp.asarray(c_emb), k=k, block=block)
+    else:
+        scores, idx = topk_exact(jnp.asarray(q_emb), jnp.asarray(c_emb),
+                                 k=k, block=block)
+    scores = np.asarray(scores)
+    idx = np.asarray(idx)
+    run, run_scores = {}, {}
+    for qi, qid in enumerate(query_ids):
+        run[qid] = [doc_ids[j] for j in idx[qi]]
+        run_scores[qid] = [float(s) for s in scores[qi]]
+    return run, run_scores
+
+
+def rerank_run(query_ids, q_emb, doc_ids, c_emb, per_query: dict, *, k: int):
+    """RocketQA-style re-rank validation: score only each query's candidate
+    list (no global top-k)."""
+    doc_pos = {d: i for i, d in enumerate(doc_ids)}
+    run, run_scores = {}, {}
+    c = np.asarray(c_emb)
+    q = np.asarray(q_emb)
+    for qi, qid in enumerate(query_ids):
+        cands = [d for d in per_query.get(qid, []) if d in doc_pos]
+        if not cands:
+            run[qid], run_scores[qid] = [], []
+            continue
+        sub = c[[doc_pos[d] for d in cands]]
+        s = sub @ q[qi]
+        order = np.argsort(-s)[:k]
+        run[qid] = [cands[j] for j in order]
+        run_scores[qid] = [float(s[j]) for j in order]
+    return run, run_scores

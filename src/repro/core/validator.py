@@ -1,0 +1,138 @@
+"""AsyncValidator — the paper's contribution: validation decoupled from training.
+
+Runs on its own mesh/pod (here: its own thread), watches the checkpoint
+directory, validates every new committed checkpoint, and reports metrics.
+Training NEVER blocks on it.
+
+Crash tolerance (beyond-paper, required at scale): every completed validation
+is appended to a ledger file; on restart the validator skips ledgered steps,
+making validation idempotent.  The ledger also feeds checkpoint GC
+protection (a checkpoint is deletable only once validated).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.ckpt import checkpoint as ckpt
+from repro.core.pipeline import (ValidationPipeline, ValidationResult,
+                                 params_from_checkpoint)
+from repro.core.reporting import BaseLogger
+from repro.core.watcher import CheckpointWatcher, Policy
+
+
+class ValidationLedger:
+    """Append-only record of validated steps (idempotent restarts)."""
+
+    def __init__(self, path: Optional[str]):
+        self.path = path
+        self._done: Dict[int, dict] = {}
+        if path and os.path.exists(path):
+            with open(path) as f:
+                for line in f:
+                    if line.strip():
+                        rec = json.loads(line)
+                        self._done[int(rec["step"])] = rec
+
+    def __contains__(self, step: int) -> bool:
+        return step in self._done
+
+    @property
+    def validated_steps(self) -> List[int]:
+        return sorted(self._done)
+
+    def record(self, result: ValidationResult) -> None:
+        rec = {"step": result.step, "metrics": result.metrics,
+               "timings": result.timings, "subset_size": result.subset_size}
+        self._done[result.step] = rec
+        if self.path:
+            with open(self.path, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+
+
+class AsyncValidator:
+    def __init__(self, ckpt_root: str, pipeline: ValidationPipeline, *,
+                 logger: Optional[BaseLogger] = None,
+                 policy: Optional[Policy] = None,
+                 max_num_valid: Optional[int] = None,
+                 ledger_path: Optional[str] = None,
+                 poll_interval_s: float = 0.2,
+                 params_extractor: Callable = params_from_checkpoint,
+                 shardings: Any = None):
+        self.ckpt_root = ckpt_root
+        self.pipeline = pipeline
+        self.logger = logger
+        self.watcher = CheckpointWatcher(ckpt_root, policy=policy)
+        self.max_num_valid = max_num_valid
+        self.ledger = ValidationLedger(ledger_path)
+        self.poll_interval_s = poll_interval_s
+        self.params_extractor = params_extractor
+        self.shardings = shardings      # validator-mesh layout (elastic)
+        self.results: List[ValidationResult] = []
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.errors: List[tuple] = []
+
+    # -- core single-pass --------------------------------------------------
+    def validate_pending(self) -> int:
+        n = 0
+        for step in self.watcher.poll():
+            if self.max_num_valid is not None \
+                    and len(self.results) >= self.max_num_valid:
+                break
+            if step in self.ledger:
+                continue
+            try:
+                state, _ = ckpt.restore(self.ckpt_root, step,
+                                        shardings=self.shardings)
+                params = self.params_extractor(state)
+                result = self.pipeline.validate_params(params, step=step)
+            except Exception as e:      # validation must never kill training
+                self.errors.append((step, repr(e)))
+                self.watcher.mark_seen(step)
+                continue
+            self.ledger.record(result)
+            self.results.append(result)
+            if self.logger is not None:
+                self.logger.log(step, {**result.metrics, **result.timings,
+                                       "subset_size": result.subset_size})
+            n += 1
+        return n
+
+    # -- async (thread) mode -----------------------------------------------
+    def start(self) -> None:
+        assert self._thread is None
+
+        def loop():
+            while not self._stop.is_set():
+                self.validate_pending()
+                if self.max_num_valid is not None \
+                        and len(self.results) >= self.max_num_valid:
+                    return
+                self._stop.wait(self.poll_interval_s)
+
+        self._thread = threading.Thread(target=loop, daemon=True)
+        self._thread.start()
+
+    def stop(self, *, drain: bool = True) -> None:
+        """Signal shutdown; with drain=True validate whatever is committed."""
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if drain:
+            self.validate_pending()
+
+    # -- single-GPU mode (paper: run after training completes) -------------
+    def validate_all_existing(self) -> List[ValidationResult]:
+        self.validate_pending()
+        return self.results
+
+    def protect_set(self) -> set:
+        """Steps GC must keep: anything committed but not yet validated."""
+        committed = set(ckpt.list_steps(self.ckpt_root))
+        return committed - set(self.ledger.validated_steps)

@@ -1,0 +1,63 @@
+"""Checkpoint watcher — the paper's "listen to --ckpts_dir" loop, hardened.
+
+Only directories carrying the COMMIT marker are visible (two-phase commit,
+see ``repro.ckpt.checkpoint``), so a validator polling while the trainer is
+mid-write can never read a torn checkpoint.
+
+Scheduling policies (beyond-paper, needed when validation is slower than the
+checkpoint cadence at scale):
+  * FIFO          — the paper's behaviour: validate every checkpoint in order.
+  * LATEST_FIRST  — always jump to the newest checkpoint, skipping stale ones
+                    (bounds validation staleness; skipped steps are recorded).
+  * STRIDE(k)     — validate every k-th checkpoint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Set
+
+from repro.ckpt import checkpoint as ckpt
+
+
+@dataclasses.dataclass
+class Policy:
+    kind: str = "fifo"            # fifo | latest_first | stride
+    stride: int = 1
+
+    def select(self, pending: List[int]) -> List[int]:
+        """Order/filter newly discovered steps for validation."""
+        if not pending:
+            return []
+        if self.kind == "fifo":
+            return sorted(pending)
+        if self.kind == "latest_first":
+            return [max(pending)]
+        if self.kind == "stride":
+            return sorted(s for s in pending if (s // max(self.stride, 1))
+                          * self.stride == s or s % self.stride == 0)
+        raise ValueError(self.kind)
+
+
+class CheckpointWatcher:
+    def __init__(self, root: str, *, policy: Optional[Policy] = None,
+                 skip_existing: bool = False):
+        self.root = root
+        self.policy = policy or Policy()
+        self._seen: Set[int] = set()
+        if skip_existing:
+            self._seen.update(ckpt.list_steps(root))
+
+    def poll(self) -> List[int]:
+        """New committed steps since the last poll, policy-ordered."""
+        steps = [s for s in ckpt.list_steps(self.root) if s not in self._seen]
+        chosen = self.policy.select(steps)
+        # under latest_first, skipped (stale) steps are marked seen too
+        if self.policy.kind == "latest_first":
+            self._seen.update(steps)
+        else:
+            self._seen.update(chosen)
+        return chosen
+
+    def mark_seen(self, step: int) -> None:
+        self._seen.add(step)

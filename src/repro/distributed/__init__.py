@@ -1,0 +1,1 @@
+from repro.distributed import fault, sharding  # noqa: F401

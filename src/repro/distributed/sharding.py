@@ -1,0 +1,239 @@
+"""Logical-axis -> PartitionSpec rules engine (GSPMD layout planning).
+
+Every parameter in this codebase is born with *logical axis names* (see
+``repro.models.nn.Param``); a :class:`Rules` table maps those names onto mesh
+axes.  The engine is shape-aware:
+
+  * **divisibility** — a mesh axis is only applied if it divides the dim;
+    otherwise the dim falls back to the next candidate (or replication).
+    This is what lets e.g. BERT's vocab=30522 coexist with a 16-way model
+    axis without per-arch special cases.
+  * **conflict dedup** — a mesh axis may appear at most once per array spec
+    (PartitionSpec invariant); the first (leftmost) logical axis that claims
+    it wins.  E.g. MoE ``("expert", "embed", "mlp")`` with expert->model,
+    mlp->model resolves to EP on experts, mlp replicated.
+  * **stacked layers** — arrays whose ndim exceeds their logical rank carry
+    leading stack dims (scan-over-layers); those are never sharded.
+
+The rule tables below implement DESIGN.md §2.5.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import nn
+
+# a rule value: mesh axis name, tuple of mesh axes (joint sharding), a
+# priority list of candidates tried in order, or None (replicate).
+AxisRule = Union[None, str, Tuple[str, ...], Sequence[Union[str, Tuple[str, ...]]]]
+
+
+@dataclasses.dataclass
+class Rules:
+    table: Dict[str, AxisRule]
+    default: AxisRule = None
+
+    def candidates(self, logical: str):
+        """Normalized list of candidate mesh-axis assignments for one dim."""
+        rule = self.table.get(logical, self.default)
+        if rule is None:
+            return []
+        if isinstance(rule, str):
+            return [rule]
+        if isinstance(rule, tuple):
+            return [rule]
+        return list(rule)  # priority list
+
+
+def _axis_size(mesh: Mesh, assignment: Union[str, Tuple[str, ...]]) -> int:
+    if isinstance(assignment, str):
+        return mesh.shape[assignment]
+    size = 1
+    for a in assignment:
+        size *= mesh.shape[a]
+    return size
+
+
+def spec_for(shape: Tuple[int, ...], axes: Tuple[str, ...], rules: Rules,
+             mesh: Mesh) -> P:
+    """PartitionSpec for one array given its logical axes.
+
+    ``len(axes)`` may be smaller than ``len(shape)``: the extra *leading*
+    dims are scan stacks and stay unsharded.
+    """
+    n_stack = len(shape) - len(axes)
+    assert n_stack >= 0, f"rank {len(shape)} < logical rank {len(axes)}"
+    entries: list = [None] * n_stack
+    used: set = set()
+    for dim, logical in zip(shape[n_stack:], axes):
+        chosen = None
+        for cand in rules.candidates(logical):
+            flat = (cand,) if isinstance(cand, str) else tuple(cand)
+            if any(a in used for a in flat):
+                continue
+            if dim % _axis_size(mesh, cand) != 0:
+                continue
+            chosen = cand
+            used.update(flat)
+            break
+        entries.append(chosen)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def tree_shardings(abstract_params: Any, axes_tree: Any, rules: Rules,
+                   mesh: Mesh) -> Any:
+    """NamedSharding pytree parallel to ``abstract_params``.
+
+    ``abstract_params``: ShapeDtypeStructs (from ``nn.abstract_init``);
+    ``axes_tree``: the matching logical-axes pytree.
+    """
+    def one(leaf, axes):
+        return NamedSharding(mesh, spec_for(tuple(leaf.shape), tuple(axes),
+                                            rules, mesh))
+    return jax.tree_util.tree_map(one, abstract_params, axes_tree,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+
+
+def opt_state_shardings(abstract_opt_state: Any, abstract_params: Any,
+                        param_shardings: Any, mesh: Mesh) -> Any:
+    """Shardings for optimizer state by *shape matching* against params.
+
+    Works for any optimizer whose slots mirror the param tree:
+      * same-shape slots (Adam m/v, error-feedback buffers) inherit the
+        param's spec;
+      * factored slots (Adafactor vr/vc: param shape minus one dim) inherit
+        the spec with the dropped dim removed;
+      * anything else (step counters, scalars) is replicated.
+    """
+    flat_p = jax.tree_util.tree_leaves(abstract_params)
+    flat_s = jax.tree_util.tree_leaves(param_shardings)
+    by_shape: Dict[Tuple[int, ...], NamedSharding] = {}
+    for p, s in zip(flat_p, flat_s):
+        by_shape.setdefault(tuple(p.shape), s)
+
+    # factored lookup: map "param shape minus dim d" -> spec minus entry d
+    factored: Dict[Tuple[int, ...], NamedSharding] = {}
+    for p, s in zip(flat_p, flat_s):
+        shape = tuple(p.shape)
+        if len(shape) < 2:
+            continue
+        spec = list(s.spec) + [None] * (len(shape) - len(s.spec))
+        for d in (len(shape) - 1, len(shape) - 2):   # adafactor drops -1 / -2
+            red = shape[:d] + shape[d + 1:]
+            rspec = spec[:d] + spec[d + 1:]
+            while rspec and rspec[-1] is None:
+                rspec.pop()
+            factored.setdefault(red, NamedSharding(mesh, P(*rspec)))
+
+    replicated = NamedSharding(mesh, P())
+
+    def one(leaf):
+        shape = tuple(leaf.shape)
+        if shape in by_shape:
+            return by_shape[shape]
+        if shape in factored:
+            return factored[shape]
+        return replicated
+
+    return jax.tree_util.tree_map(one, abstract_opt_state)
+
+
+# ---------------------------------------------------------------------------
+# Rule tables (DESIGN.md §2.5)
+# ---------------------------------------------------------------------------
+
+
+def lm_train_rules() -> Rules:
+    """2-D sharding: TP on "model" (heads/mlp/vocab/experts), FSDP on "data"."""
+    return Rules({
+        "embed": ["data", "model"],     # FSDP; fall back to model if data ∤ dim
+        "embed2": "data",
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "vocab": ["model", "data"],
+        "expert": "model",              # EP
+        "kv_lora": "data",
+        "table_rows": [("data", "model"), "data", "model"],
+        "gnn_in": "data",
+        "gnn_hidden": "model",
+        "gnn_out": None,
+        "pos": None, "seq": None, "interests": None,
+    })
+
+
+def lm_serve_rules() -> Rules:
+    """Inference: 2-D weight sharding — TP on "model" (heads/mlp/vocab/
+    experts) plus "data" on the embed dim.  Weights-resident TP-only serving
+    (embed replicated) does not fit the 70B+/480B archs on 16 GiB chips
+    (measured: arctic decode 176 GiB/device); the 2-D layout trades one
+    all-gather per projection for a 16x weight-memory cut — the MaxText
+    big-model serving layout."""
+    return Rules({
+        "embed": "data",
+        "embed2": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "vocab": ["model", "data"],
+        "expert": "model",
+        "kv_lora": "data",
+        "table_rows": [("data", "model"), "data", "model"],
+        "gnn_in": None, "gnn_hidden": "model", "gnn_out": None,
+        "pos": None, "seq": None, "interests": None,
+    })
+
+
+def fsdp_only_rules() -> Rules:
+    """Pure ZeRO-3 over every mesh axis jointly (validator / encode meshes:
+    encoding is data-parallel so weights just need to fit)."""
+    return Rules({}, default=[("data", "model"), "data", "model"])
+
+
+# -- input/activation specs --------------------------------------------------
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes used for data parallelism ("pod" joins "data" if present)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def lm_batch_spec(mesh: Mesh, global_batch: int) -> P:
+    dp = batch_axes(mesh)
+    if global_batch % _axis_size(mesh, dp) == 0:
+        return P(dp)
+    if global_batch % mesh.shape["data"] == 0:
+        return P("data")
+    return P()
+
+
+def cache_spec(mesh: Mesh, cache_shape: Tuple[int, ...], batch: int,
+               *, seq_dim: int = 2, batch_dim: int = 1) -> P:
+    """KV-cache layout: batch on DP axes, sequence on "model" (GQA kv-head
+    counts don't divide 16); batch=1 long-context shards sequence over
+    every axis (DESIGN.md §2.4)."""
+    dp = batch_axes(mesh)
+    entries: list = [None] * len(cache_shape)
+    T = cache_shape[seq_dim]
+    if batch % _axis_size(mesh, dp) == 0:
+        entries[batch_dim] = dp
+        if T % mesh.shape["model"] == 0:
+            entries[seq_dim] = "model"
+    else:
+        # batch unshardable -> give the sequence the whole mesh
+        all_ax = tuple(a for a in ("pod", "data", "model")
+                       if a in mesh.axis_names)
+        if T % _axis_size(mesh, all_ax) == 0:
+            entries[seq_dim] = all_ax
+        elif T % mesh.shape["model"] == 0:
+            entries[seq_dim] = "model"
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for decode_attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(length, q, k, v):
+    """length: scalar/(1,) i32; q: (B, KV, G, d); k, v: (B, KV, T, d)
+    -> (B, KV, G, d)."""
+    d = q.shape[-1]
+    T = k.shape[2]
+    s = jnp.einsum("bhgd,bhtd->bhgt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    valid = jnp.arange(T) < jnp.asarray(length).reshape(())
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgt,bhtd->bhgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

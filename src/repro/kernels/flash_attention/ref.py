@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for flash_attention: dense softmax attention w/ GQA."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool, t_valid: int | None = None):
+    """q: (B, H, S, d); k, v: (B, KV, T, d) -> (B, H, S, d)."""
+    B, H, S, d = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    group = H // KV
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / (d ** 0.5)
+    tpos = jnp.arange(T)
+    mask = jnp.ones((S, T), bool)
+    if t_valid is not None:
+        mask = mask & (tpos[None, :] < t_valid)
+    if causal:
+        mask = mask & (tpos[None, :] <= jnp.arange(S)[:, None])
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,41 @@
+"""jit'd dispatch wrapper for the topk_mips Pallas kernel.
+
+Handles shape padding (queries to bq, corpus rows to bn, feature dim to the
+128-lane MXU width) and backend selection: on TPU the Mosaic kernel runs
+natively; everywhere else (this CPU box) ``interpret=True`` executes the
+kernel body in Python for correctness validation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk_mips.kernel import topk_mips_kernel
+
+
+def _pad_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def topk_mips(q: jnp.ndarray, c: jnp.ndarray, *, k: int, bq: int = 128,
+              bn: int = 1024, interpret: bool | None = None):
+    """Exact top-k MIPS: q (Q, D) x c (N, D) -> (scores, indices) (Q, k)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    Q, D = q.shape
+    N = c.shape[0]
+    k_eff = min(k, N)
+    bq = min(bq, _pad_to(Q, 8))
+    bn = min(bn, _pad_to(max(N, k_eff), 128))
+    kp = k_eff                                     # k <= bn guaranteed below
+    if kp > bn:
+        bn = _pad_to(kp, 128)
+    Dp = _pad_to(D, 128)
+    Qp = _pad_to(Q, bq)
+    Np = _pad_to(N, bn)
+    qp = jnp.pad(q, ((0, Qp - Q), (0, Dp - D)))
+    cp = jnp.pad(c, ((0, Np - N), (0, Dp - D)))
+    scores, idx = topk_mips_kernel(qp, cp, k=kp, n_valid=N, bq=bq, bn=bn,
+                                   interpret=interpret)
+    return scores[:Q], idx[:Q]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the topk_mips kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_mips_ref(q: jnp.ndarray, c: jnp.ndarray, *, k: int):
+    """q: (Q, D), c: (N, D) -> (scores (Q, k) f32, indices (Q, k) i32)."""
+    scores = (q.astype(jnp.float32) @ c.astype(jnp.float32).T)
+    top_s, top_i = jax.lax.top_k(scores, k)
+    return top_s, top_i.astype(jnp.int32)

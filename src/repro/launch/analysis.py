@@ -1,0 +1,231 @@
+"""Roofline extraction from compiled dry-run artifacts (DESIGN.md §2.7).
+
+Sources:
+  * ``compiled.cost_analysis()``  -> HLO FLOPs + bytes accessed (per-device:
+    the compiled module is the per-device SPMD program).
+  * ``compiled.as_text()``        -> optimized HLO; collective wire bytes are
+    summed from every all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute with ring-algorithm factors over the parsed
+    replica-group size.
+
+Scan correction: XLA counts a ``while`` (scan) body ONCE, not x trip-count
+(verified empirically — see EXPERIMENTS.md §Dry-run).  The dry-run therefore
+measures *cost variants* (reduced depth, fully unrolled) and extrapolates:
+
+    Q_full = Q(1 scaled layer) + (L_scaled - 1) * [Q(2) - Q(1)]
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# "f32[128,1024]{1,0}" or "bf16[8,16]" or scalar "f32[]"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, world: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))                       # [groups, group_size]
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(1, len(ids))
+    return world
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    group: int
+    wire_bytes: float      # per-device, ring algorithm
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def _wire_bytes(kind: str, result_bytes: int, g: int) -> float:
+    """Per-device wire traffic under ring algorithms."""
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g * result_bytes
+    if kind == "all-gather":
+        return (g - 1) / g * result_bytes            # result = g x shard
+    if kind == "reduce-scatter":
+        return (g - 1) * result_bytes                # operand = g x result
+    if kind == "all-to-all":
+        return (g - 1) / g * result_bytes
+    if kind == "collective-permute":
+        return float(result_bytes)                   # one hop send+recv
+    return 0.0
+
+
+def parse_collectives(hlo_text: str, world: int) -> List[CollectiveOp]:
+    """Collective ops with per-device wire bytes from optimized HLO text."""
+    out: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # match "= TYPE <op>(" — defining instructions only, skip *-start/done
+        m = re.search(r"=\s+(\S+(?:\([^)]*\))?)\s+(" + "|".join(_COLLECTIVES)
+                      + r")(?:\.\d+)?\(", ls)
+        if not m:
+            continue
+        if re.search(r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)-(start|done)", ls):
+            # async pairs: count the -start (has the shape), skip -done
+            if "-done" in m.group(2) or re.search(r"-done\(", ls):
+                continue
+        type_str, kind = m.group(1), m.group(2)
+        rb = _shape_bytes(type_str)
+        if rb == 0:
+            continue
+        g = _group_size(ls, world)
+        out.append(CollectiveOp(kind, rb, g, _wire_bytes(kind, rb, g)))
+    return out
+
+
+# ops whose results cross HBM even after TPU fusion: matmuls, data movement,
+# gather/scatter, loop/fusion boundaries.  Pure elementwise (add/mul/convert/
+# select/exp/broadcast) fuses into producers on TPU and is excluded — this is
+# the fusion-adjusted HBM-bytes estimate reported alongside the raw
+# ``cost_analysis()["bytes accessed"]`` (XLA:CPU fuses far less than TPU, so
+# the raw number overestimates TPU HBM traffic; EXPERIMENTS.md §Roofline
+# reports both).
+_HBM_BOUNDARY_OPS = ("dot", "fusion", "gather", "scatter", "convolution",
+                     "copy", "transpose", "dynamic-slice",
+                     "dynamic-update-slice", "while", "sort", "reduce")
+_HBM_RE = re.compile(
+    r"=\s+(\S+(?:\([^)]*\))?)\s+(" + "|".join(_HBM_BOUNDARY_OPS)
+    + r")(?:\.\d+)?\(")
+
+
+def fusion_adjusted_bytes(hlo_text: str) -> float:
+    """Sum of result bytes over fusion-boundary ops (TPU HBM-traffic proxy)."""
+    total = 0
+    for line in hlo_text.splitlines():
+        m = _HBM_RE.search(line.strip())
+        if m:
+            total += _shape_bytes(m.group(1))
+    return float(total)
+
+
+@dataclasses.dataclass
+class Measurement:
+    """Per-device cost numbers from one compiled artifact."""
+    flops: float
+    bytes_accessed: float
+    coll_wire_bytes: float
+    coll_ops: List[Dict[str, Any]]
+    hbm_bytes_est: float = 0.0
+    peak_memory_bytes: Optional[float] = None
+
+    def combine(self, other: "Measurement", scale: float) -> "Measurement":
+        """self + scale * other (for per-layer extrapolation)."""
+        return Measurement(
+            flops=self.flops + scale * other.flops,
+            bytes_accessed=self.bytes_accessed + scale * other.bytes_accessed,
+            coll_wire_bytes=self.coll_wire_bytes + scale * other.coll_wire_bytes,
+            coll_ops=self.coll_ops,
+            hbm_bytes_est=self.hbm_bytes_est + scale * other.hbm_bytes_est,
+        )
+
+    @staticmethod
+    def delta(q2: "Measurement", q1: "Measurement") -> "Measurement":
+        return Measurement(
+            flops=max(0.0, q2.flops - q1.flops),
+            bytes_accessed=max(0.0, q2.bytes_accessed - q1.bytes_accessed),
+            coll_wire_bytes=max(0.0, q2.coll_wire_bytes - q1.coll_wire_bytes),
+            coll_ops=[],
+            hbm_bytes_est=max(0.0, q2.hbm_bytes_est - q1.hbm_bytes_est),
+        )
+
+
+def measure(compiled, world: int) -> Measurement:
+    cost = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    colls = parse_collectives(text, world)
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem = float(getattr(ma, "temp_size_in_bytes", 0)
+                        + getattr(ma, "argument_size_in_bytes", 0)
+                        + getattr(ma, "output_size_in_bytes", 0)
+                        - getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        pass
+    return Measurement(
+        flops=float(cost.get("flops", 0.0)),
+        bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+        coll_wire_bytes=sum(c.wire_bytes for c in colls),
+        coll_ops=[c.as_dict() for c in colls],
+        hbm_bytes_est=fusion_adjusted_bytes(text),
+        peak_memory_bytes=mem,
+    )
+
+
+def extrapolate(q1: Measurement, q2: Optional[Measurement],
+                n_scaled: int) -> Measurement:
+    """Q_full = Q1 + (n_scaled - 1) * (Q2 - Q1); Q2=None -> exact (no scan)."""
+    if q2 is None or n_scaled <= 1:
+        return q1
+    return q1.combine(Measurement.delta(q2, q1), float(n_scaled - 1))
+
+
+def roofline(m: Measurement, model_flops_per_dev: float) -> Dict[str, float]:
+    compute_s = m.flops / PEAK_FLOPS
+    memory_raw_s = m.bytes_accessed / HBM_BW          # prescribed metric
+    memory_s = m.hbm_bytes_est / HBM_BW               # fusion-adjusted
+    coll_s = m.coll_wire_bytes / ICI_BW
+    bound = max((compute_s, "compute"), (memory_s, "memory"),
+                (coll_s, "collective"))
+    step_s = max(compute_s, memory_s, coll_s)
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "memory_raw_s": memory_raw_s,
+        "collective_s": coll_s,
+        "bottleneck": bound[1],
+        "step_time_s": step_s,                      # no-overlap upper bound
+        "model_flops_per_dev": model_flops_per_dev,
+        "useful_flops_frac": (model_flops_per_dev / m.flops
+                              if m.flops > 0 else 0.0),
+        # achieved fraction of the compute roofline if the dominant term
+        # were the wall clock (the score the perf loop drives up):
+        "roofline_frac": (model_flops_per_dev / PEAK_FLOPS / step_s
+                          if step_s > 0 else 0.0),
+    }

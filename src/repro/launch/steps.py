@@ -1,0 +1,671 @@
+"""Per-(arch x shape) step construction: abstract inputs + shardings.
+
+``build_step(arch_id, shape_name, mesh)`` returns a :class:`StepSpec` whose
+``fn``/``abstract_args``/``in_shardings``/``out_shardings`` feed straight
+into ``jax.jit(...).lower(...)`` — the multi-pod dry-run, the roofline
+extraction, and the real launchers all consume the same builders.
+
+Variants (DESIGN.md §2.7):
+  * ``variant="full"`` — the real configuration (scan-over-layers, remat):
+    compile proof + memory analysis.
+  * ``variant="cost"``  — layer stacks cut to ``cost_layers`` per stack and
+    every inner scan fully unrolled, so ``cost_analysis()`` counts each body
+    exactly once per trip; the dry-run extrapolates per-layer costs back to
+    full depth.
+
+Nothing in this module allocates device memory: parameters come from
+``nn.abstract_init`` (ShapeDtypeStructs), inputs are ShapeDtypeStructs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.distributed import sharding as shd
+from repro.models import graphcast as gcast
+from repro.models import nn
+from repro.models import recsys as rcs
+from repro.models import transformer as tfm
+from repro.models.biencoder import biencoder_spec, contrastive_loss
+from repro.train import optim
+from repro.train.trainer import make_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class StepSpec:
+    cell: str
+    kind: str                       # train | prefill | decode | serve | retrieval | encode
+    fn: Callable
+    abstract_args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+    meta: Dict[str, Any]
+
+
+def _repl(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _act_rules(mesh: Mesh, *, sp: bool = False) -> Dict[str, Any]:
+    """Logical activation axes -> mesh axes (DESIGN.md §2.5): batch on the
+    DP axes, head/mlp/vocab projections on "model", x replicated over
+    "model" between blocks (Megatron layout).  Non-divisible dims fall back
+    to replication inside ``nn.constrain``.
+
+    ``sp=True`` enables *sequence parallelism*: the residual stream between
+    blocks is sharded over "model" on the sequence dim.  This shards the
+    per-layer remat carry stack (L x B_loc x S x D bf16 — the dominant
+    training buffer; 30.6 GiB/device for arctic-480b without SP, /16 with)
+    at the cost of per-layer all-gather/reduce-scatter pairs GSPMD inserts
+    around the TP projections — the Megatron-LM SP layout."""
+    dp = shd.batch_axes(mesh)
+    return {"act_batch": dp, "act_seq": ("model" if sp else None),
+            "act_embed": None,
+            "act_heads": "model", "act_kv_heads": "model",
+            "act_mlp": "model", "act_vocab": "model",
+            "act_expert": "model",
+            "act_rows": dp + ("model",)}
+
+
+def _with_act(fn: Callable, mesh: Mesh, rules: Optional[Dict] = None, *,
+              sp: bool = False):
+    """Wrap a step so tracing happens under the activation-sharding context."""
+    rules = rules if rules is not None else _act_rules(mesh, sp=sp)
+
+    def wrapped(*args):
+        with nn.activation_sharding(mesh, rules):
+            return fn(*args)
+
+    return wrapped
+
+
+def _named(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _count(tree) -> int:
+    return int(sum(math.prod(l.shape) for l in jax.tree_util.tree_leaves(tree)))
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+# full-config execution knobs used ONLY for the big dry-run configs
+# (smoke tests keep dataclass defaults). vocab_chunk keeps the (tokens, V)
+# logits tensor off HBM; q_chunk bounds the attention working set.
+_LM_DRYRUN_KNOBS = dict(remat=True, q_chunk=512, vocab_chunk=8192)
+
+
+def _lm_cfg(arch_id: str, *, variant: str, kind: str,
+            cost_layers: int = 1) -> tfm.TransformerConfig:
+    cfg = registry.get(arch_id).full_config()
+    knobs = dict(_LM_DRYRUN_KNOBS)
+    if kind != "train":
+        knobs["remat"] = False
+    if variant == "cost":
+        # reduced-depth, fully-unrolled cost-extraction variant
+        n_dense = cfg.first_k_dense if cfg.is_moe else cost_layers
+        n_moe = cost_layers if cfg.is_moe else 0
+        knobs.update(n_layers=n_dense + n_moe,
+                     layer_unroll=0, attn_unroll=0, xent_unroll=0)
+        if cfg.is_moe and cfg.first_k_dense == 0:
+            knobs["n_layers"] = cost_layers           # all-MoE stacks (arctic)
+    return dataclasses.replace(cfg, **knobs)
+
+
+def _lm_active_params(cfg: tfm.TransformerConfig, params_abs) -> Tuple[int, int]:
+    """(total, active) parameter counts. Active replaces the routed-expert
+    block with top_k experts (MoE forward touches top_k + shared only)."""
+    total = _count(params_abs)
+    if not cfg.is_moe:
+        return total, total
+    n_moe_layers = cfg.n_layers - cfg.first_k_dense
+    per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+    inactive = n_moe_layers * (cfg.moe_num_experts - cfg.moe_top_k) * per_expert
+    return total, total - inactive
+
+
+def _lm_attn_flops(cfg, S_q: int, T_kv: int, batch: int, causal_avg: bool) -> float:
+    """QK^T + PV matmul flops for one forward pass."""
+    t_eff = (T_kv + 1) / 2 if causal_avg else T_kv
+    if cfg.mla:
+        d_qk, d_v = cfg.qk_nope_dim + cfg.qk_rope_dim, cfg.v_head_dim
+        per = 2 * cfg.n_heads * (d_qk + d_v) * t_eff
+    else:
+        per = 4 * cfg.n_heads * cfg.head_dim * t_eff
+    return cfg.n_layers * batch * S_q * per
+
+
+def _lm_model_flops(cfg, kind: str, B: int, S: int, params_abs) -> Dict[str, float]:
+    total, active = _lm_active_params(cfg, params_abs)
+    if kind == "train":
+        tokens = B * S
+        mf = 6.0 * active * tokens + 3 * _lm_attn_flops(cfg, S, S, B, True)
+    elif kind == "prefill":
+        tokens = B * S
+        mf = 2.0 * active * tokens + _lm_attn_flops(cfg, S, S, B, True)
+    else:  # decode: one token against a T=S cache
+        tokens = B
+        mf = 2.0 * active * tokens + _lm_attn_flops(cfg, 1, S, B, False)
+    return {"model_flops": mf, "params": total, "active_params": active,
+            "tokens": tokens}
+
+
+def _lm_abstract_params(cfg, mesh, rules):
+    shapes, axes = nn.abstract_init(tfm.init, jax.random.PRNGKey(0), cfg)
+    return shapes, shd.tree_shardings(shapes, axes, rules, mesh)
+
+
+def _make_optimizer(arch_id: str):
+    if arch_id == "arctic-480b":        # full Adam state doesn't fit 256 chips
+        return optim.adafactor(1e-4), "adafactor"
+    return optim.adamw(optim.warmup_cosine(3e-4, 2000, 100_000)), "adamw"
+
+
+def lm_train_spec(arch_id: str, shape: dict, mesh: Mesh, *,
+                  variant: str = "full", cost_layers: int = 1,
+                  sp: Optional[bool] = None,
+                  cfg_overrides: Optional[Dict[str, Any]] = None) -> StepSpec:
+    B, S = shape["global_batch"], shape["seq_len"]
+    cfg = _lm_cfg(arch_id, variant=variant, kind="train",
+                  cost_layers=cost_layers)
+    if cfg_overrides:
+        ov = dict(cfg_overrides)
+        for key in ("param_dtype", "compute_dtype"):
+            if key in ov:
+                ov[key] = {"bf16": jnp.bfloat16, "f32": jnp.float32}[ov[key]]
+        cfg = dataclasses.replace(cfg, **ov)
+    full_cfg = registry.get(arch_id).full_config()
+    if sp is None:
+        # sequence parallelism on when the remat carry stack would not fit:
+        # L x (B/dp) x S x D bf16 against a ~16 GiB HBM budget
+        dp = int(np.prod([mesh.shape[a] for a in shd.batch_axes(mesh)]))
+        carry_gib = (full_cfg.n_layers * (B // dp) * S * full_cfg.d_model
+                     * 2 / 2**30)
+        sp = carry_gib > 4.0
+    rules = shd.lm_train_rules()
+    params_abs, params_sh = _lm_abstract_params(cfg, mesh, rules)
+    opt, opt_name = _make_optimizer(arch_id)
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+    opt_sh = shd.opt_state_shardings(opt_abs, params_abs, params_sh, mesh)
+
+    batch_abs = {"tokens": SDS((B, S), jnp.int32)}
+    batch_sh = {"tokens": _named(mesh, shd.lm_batch_spec(mesh, B))}
+
+    step = make_train_step(lambda p, b: tfm.lm_loss(p, cfg, b), opt)
+    meta = _lm_model_flops(cfg, "train", B, S, params_abs)
+    meta.update(optimizer=opt_name, n_layers=cfg.n_layers, variant=variant,
+                sequence_parallel=bool(sp))
+
+    return StepSpec(
+        cell=f"{arch_id}/train", kind="train", fn=_with_act(step, mesh, sp=sp),
+        abstract_args=(params_abs, opt_abs, batch_abs),
+        in_shardings=(params_sh, opt_sh, batch_sh),
+        out_shardings=(params_sh, opt_sh, _repl(mesh)),
+        donate_argnums=(0, 1), meta=meta)
+
+
+def _serve_params(cfg, mesh, layout: str = "2d"):
+    """Serving weights in bf16.
+
+    layout="2d": TP on "model" + "data" on the embed dim (fits 70B+/480B on
+    16 GiB chips at the cost of per-layer weight all-gathers — measured to
+    dominate decode collectives).
+    layout="tp": weights resident per TP group (replicated over "data") —
+    zero weight gathers; only valid when params_bf16/TP fits HBM.
+    """
+    if layout == "tp":
+        rules = shd.Rules({
+            "embed": None, "embed2": None, "heads": "model",
+            "kv_heads": "model", "mlp": "model", "vocab": "model",
+            "expert": "model", "kv_lora": None,
+            "table_rows": [("data", "model"), "data", "model"],
+            "pos": None, "seq": None, "interests": None,
+        })
+    else:
+        rules = shd.lm_serve_rules()
+    shapes, axes = nn.abstract_init(tfm.init, jax.random.PRNGKey(0), cfg)
+    shapes = jax.tree_util.tree_map(
+        lambda s: SDS(s.shape, jnp.bfloat16)
+        if jnp.issubdtype(s.dtype, jnp.floating) else s, shapes)
+    return shapes, shd.tree_shardings(shapes, axes, rules, mesh)
+
+
+def lm_prefill_spec(arch_id: str, shape: dict, mesh: Mesh, *,
+                    variant: str = "full", cost_layers: int = 1,
+                    serve_layout: str = "2d") -> StepSpec:
+    B, S = shape["global_batch"], shape["seq_len"]
+    cfg = _lm_cfg(arch_id, variant=variant, kind="prefill",
+                  cost_layers=cost_layers)
+    params_abs, params_sh = _serve_params(cfg, mesh, serve_layout)
+    tokens_abs = SDS((B, S), jnp.int32)
+    tokens_sh = _named(mesh, shd.lm_batch_spec(mesh, B))
+
+    def prefill_step(params, tokens):
+        return tfm.prefill(params, cfg, tokens, max_len=S)
+
+    cache_abs = jax.eval_shape(
+        lambda: tfm.init_cache(cfg, B, S, dtype=cfg.compute_dtype))
+    cache_sh = jax.tree_util.tree_map(
+        lambda l: _named(mesh, shd.cache_spec(mesh, l.shape, B)), cache_abs)
+    meta = _lm_model_flops(cfg, "prefill", B, S, params_abs)
+    meta.update(n_layers=cfg.n_layers, variant=variant)
+    return StepSpec(
+        cell=f"{arch_id}/prefill", kind="prefill", fn=_with_act(prefill_step, mesh),
+        abstract_args=(params_abs, tokens_abs),
+        in_shardings=(params_sh, tokens_sh),
+        out_shardings=(_named(mesh, shd.lm_batch_spec(mesh, B)), cache_sh),
+        donate_argnums=(), meta=meta)
+
+
+def lm_decode_spec(arch_id: str, shape: dict, mesh: Mesh, *,
+                   variant: str = "full", cost_layers: int = 1,
+                   serve_layout: str = "2d") -> StepSpec:
+    B, T = shape["global_batch"], shape["seq_len"]
+    cfg = _lm_cfg(arch_id, variant=variant, kind="decode",
+                  cost_layers=cost_layers)
+    params_abs, params_sh = _serve_params(cfg, mesh, serve_layout)
+    cache_abs = jax.eval_shape(
+        lambda: tfm.init_cache(cfg, B, T, dtype=cfg.compute_dtype))
+    cache_sh = jax.tree_util.tree_map(
+        lambda l: _named(mesh, shd.cache_spec(mesh, l.shape, B)), cache_abs)
+    tok_abs = SDS((B, 1), jnp.int32)
+    tok_sh = _named(mesh, shd.lm_batch_spec(mesh, B))
+    idx_abs = SDS((), jnp.int32)
+
+    def decode(params, caches, token, index):
+        return tfm.decode_step(params, cfg, caches, token, index)
+
+    meta = _lm_model_flops(cfg, "decode", B, T, params_abs)
+    meta.update(n_layers=cfg.n_layers, variant=variant)
+    return StepSpec(
+        cell=f"{arch_id}/decode", kind="decode", fn=_with_act(decode, mesh),
+        abstract_args=(params_abs, cache_abs, tok_abs, idx_abs),
+        in_shardings=(params_sh, cache_sh, tok_sh, _repl(mesh)),
+        out_shardings=(tok_sh, cache_sh),
+        donate_argnums=(1,), meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# GNN family (graphcast)
+# ---------------------------------------------------------------------------
+
+
+def _pad_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _gnn_shapes(shape: dict, mesh: Mesh) -> Tuple[int, int, int]:
+    """(n_nodes, n_edges, d_feat) on device, padded to shard evenly."""
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    if shape["kind"] == "minibatch":
+        b, (f1, f2) = shape["batch_nodes"], shape["fanout"]
+        n = b * (1 + f1 + f1 * f2)
+        e = b * (f1 + f1 * f2)
+        d = 602                              # reddit feature dim
+    elif shape["kind"] == "batched_graphs":
+        n = shape["batch"] * shape["n_nodes"]
+        e = shape["batch"] * shape["n_edges"]
+        d = 9                                # molecule atom features
+    else:
+        n, e, d = shape["n_nodes"], shape["n_edges"], shape.get("d_feat", 128)
+    return _pad_to(n, n_dev), _pad_to(e, n_dev), d
+
+
+def gnn_train_spec(arch_id: str, shape: dict, mesh: Mesh, *,
+                   variant: str = "full", cost_layers: int = 1) -> StepSpec:
+    cfg = registry.get(arch_id).full_config()
+    N, E, d_feat = _gnn_shapes(shape, mesh)
+    cfg = dataclasses.replace(cfg, d_feat=d_feat, remat=True)
+    if variant == "cost":
+        cfg = dataclasses.replace(cfg, n_layers=cost_layers, layer_unroll=0)
+
+    shapes, axes = nn.abstract_init(gcast.init, jax.random.PRNGKey(0), cfg)
+    rules = shd.lm_train_rules()
+    params_sh = shd.tree_shardings(shapes, axes, rules, mesh)
+    opt = optim.adamw(1e-3)
+    opt_abs = jax.eval_shape(opt.init, shapes)
+    opt_sh = shd.opt_state_shardings(opt_abs, shapes, params_sh, mesh)
+
+    row = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    batch_abs = {"node_feat": SDS((N, d_feat), jnp.float32),
+                 "src": SDS((E,), jnp.int32), "dst": SDS((E,), jnp.int32),
+                 "target": SDS((N, cfg.n_vars), jnp.float32),
+                 "node_mask": SDS((N,), jnp.float32)}
+    batch_sh = {"node_feat": _named(mesh, P(row)),
+                "src": _named(mesh, P(row)), "dst": _named(mesh, P(row)),
+                "target": _named(mesh, P(row)),
+                "node_mask": _named(mesh, P(row))}
+
+    step = make_train_step(lambda p, b: gcast.loss_fn(p, cfg, b), opt)
+    D = cfg.d_hidden
+    mlp2 = lambda d_in, d_out: 2 * d_in * D + 2 * D * d_out
+    fwd = (N * mlp2(d_feat, D) + E * mlp2(2 * D, D)          # encoders
+           + cfg.n_layers * (E * mlp2(3 * D, D) + N * mlp2(2 * D, D))
+           + N * mlp2(D, cfg.n_vars))                        # decoder
+    meta = {"model_flops": 3.0 * fwd, "params": _count(shapes),
+            "active_params": _count(shapes), "tokens": N,
+            "n_layers": cfg.n_layers, "optimizer": "adamw",
+            "variant": variant, "padded_nodes": N, "padded_edges": E}
+    return StepSpec(
+        cell=f"{arch_id}/train", kind="train", fn=_with_act(step, mesh),
+        abstract_args=(shapes, opt_abs, batch_abs),
+        in_shardings=(params_sh, opt_sh, batch_sh),
+        out_shardings=(params_sh, opt_sh, _repl(mesh)),
+        donate_argnums=(0, 1), meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+
+def _recsys_batch(cfg: rcs.RecsysConfig, kind: str, shape: dict,
+                  mesh: Mesh, variant: str = "full"
+                  ) -> Tuple[dict, dict, Callable]:
+    """(abstract batch, shardings, fn(params, batch))."""
+    dp = shd.batch_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    rep = P()
+
+    def sh(spec):
+        return _named(mesh, spec)
+
+    if cfg.model_type == "deepfm":
+        if kind == "retrieval":
+            B = shape["n_candidates"]            # pointwise-score candidates
+        else:
+            B = shape["batch"]
+        B = _pad_to(B, dp_size)
+        F, M = cfg.n_fields, cfg.max_hot
+        batch = {"ids": SDS((B, F, M), jnp.int32),
+                 "valid": SDS((B, F, M), jnp.bool_)}
+        specs = {"ids": sh(P(dp)), "valid": sh(P(dp))}
+        if kind == "train":
+            batch["label"] = SDS((B,), jnp.float32)
+            specs["label"] = sh(P(dp))
+            return batch, specs, None
+        fn = lambda p, b: rcs.deepfm_scores(p, cfg, b["ids"], b["valid"])
+        return batch, specs, fn
+
+    S = cfg.seq_len
+    if kind == "train":
+        B = _pad_to(shape["batch"], dp_size)
+        if cfg.model_type == "sasrec":
+            batch = {"hist": SDS((B, S), jnp.int32),
+                     "pos": SDS((B, S), jnp.int32),
+                     "neg_ids": SDS((cfg.n_negatives,), jnp.int32)}
+            specs = {"hist": sh(P(dp)), "pos": sh(P(dp)),
+                     "neg_ids": sh(rep)}
+        elif cfg.model_type == "bert4rec":
+            M = max(1, S * 15 // 100)
+            batch = {"tokens": SDS((B, S), jnp.int32),
+                     "mlm_positions": SDS((B, M), jnp.int32),
+                     "mlm_labels": SDS((B, M), jnp.int32),
+                     "mlm_mask": SDS((B, M), jnp.float32),
+                     "neg_ids": SDS((cfg.n_negatives,), jnp.int32)}
+            specs = {k: sh(P(dp)) for k in batch}
+            specs["neg_ids"] = sh(rep)
+        else:  # mind
+            batch = {"hist": SDS((B, S), jnp.int32),
+                     "target": SDS((B,), jnp.int32),
+                     "neg_ids": SDS((cfg.n_negatives,), jnp.int32)}
+            specs = {"hist": sh(P(dp)), "target": sh(P(dp)),
+                     "neg_ids": sh(rep)}
+        return batch, specs, None
+
+    if kind == "serve":
+        B = _pad_to(shape["batch"], dp_size)
+        C = cfg.n_serve_candidates
+        batch = {"hist": SDS((B, S), jnp.int32),
+                 "cand_ids": SDS((C,), jnp.int32)}
+        specs = {"hist": sh(P(dp)), "cand_ids": sh(rep)}
+        return batch, specs, lambda p, b: rcs.serve_fn(p, cfg, b)
+
+    # retrieval: one query user against the full item corpus, exact top-k
+    n_cand = shape["n_candidates"]
+    batch = {"hist": SDS((1, S), jnp.int32),
+             "cand_ids": SDS((n_cand,), jnp.int32)}
+    specs = {"hist": sh(rep), "cand_ids": sh(P(dp))}
+
+    unroll = 0 if variant == "cost" else 1       # cost variant unrolls scans
+
+    def retrieval_fn(params, b):
+        from repro.core.retrieval import topk_exact
+        u = rcs.user_embed(params, cfg, b["hist"])
+        if u.ndim == 3:                       # mind interests -> max over K
+            u = u.reshape(-1, u.shape[-1])
+        table = rcs._item_table(params, cfg).astype(jnp.float32)
+        cand = jnp.take(table, b["cand_ids"], axis=0)
+        scores, idx = topk_exact(u, cand, k=100, block=65536, unroll=unroll)
+        return scores, idx
+
+    return batch, specs, retrieval_fn
+
+
+def recsys_spec(arch_id: str, shape: dict, mesh: Mesh, *,
+                variant: str = "full", cost_layers: int = 1) -> StepSpec:
+    cfg = registry.get(arch_id).full_config()
+    if variant == "cost" and cfg.model_type in ("bert4rec", "sasrec"):
+        cfg = dataclasses.replace(cfg, n_blocks=cost_layers)
+    kind = shape["kind"]
+    shapes, axes = nn.abstract_init(rcs.init, jax.random.PRNGKey(0), cfg)
+    rules = shd.lm_train_rules() if kind == "train" else shd.lm_serve_rules()
+    params_sh = shd.tree_shardings(shapes, axes, rules, mesh)
+    batch_abs, batch_sh, serve_fn = _recsys_batch(cfg, kind, shape, mesh,
+                                                  variant)
+
+    total = _count(shapes)
+    B = next(iter(batch_abs.values())).shape[0]
+    D = cfg.embed_dim
+    if cfg.model_type in ("bert4rec", "sasrec"):
+        S = cfg.seq_len
+        dense = cfg.n_blocks * (4 * D * D + 2 * D * (cfg.d_ff or
+                (4 * D if cfg.model_type == "bert4rec" else D)))
+        fwd = B * S * 2 * dense + B * cfg.n_blocks * 4 * S * S * D
+    elif cfg.model_type == "mind":
+        fwd = B * cfg.capsule_iters * 4 * cfg.n_interests * cfg.seq_len * D
+    else:
+        dims = (cfg.n_fields * D,) + tuple(cfg.mlp_dims) + (1,)
+        fwd = B * sum(2 * a * b for a, b in zip(dims[:-1], dims[1:]))
+    if kind == "retrieval" and cfg.model_type != "deepfm":
+        fwd += 2 * shape["n_candidates"] * D
+    mf = 3.0 * fwd if kind == "train" else float(fwd)
+
+    meta = {"model_flops": mf, "params": total, "active_params": total,
+            "tokens": B, "optimizer": "adamw", "variant": variant,
+            "embedding_rows": (cfg.total_rows if cfg.model_type == "deepfm"
+                               else cfg.item_vocab)}
+
+    if kind == "train":
+        opt = optim.adamw(1e-3)
+        opt_abs = jax.eval_shape(opt.init, shapes)
+        opt_sh = shd.opt_state_shardings(opt_abs, shapes, params_sh, mesh)
+        step = make_train_step(lambda p, b: rcs.loss_fn(p, cfg, b), opt)
+        return StepSpec(
+            cell=f"{arch_id}/train", kind="train", fn=step,
+            abstract_args=(shapes, opt_abs, batch_abs),
+            in_shardings=(params_sh, opt_sh, batch_sh),
+            out_shardings=(params_sh, opt_sh, _repl(mesh)),
+            donate_argnums=(0, 1), meta=meta)
+
+    return StepSpec(
+        cell=f"{arch_id}/{kind}", kind=kind, fn=_with_act(serve_fn, mesh),
+        abstract_args=(shapes, batch_abs),
+        in_shardings=(params_sh, batch_sh),
+        out_shardings=None,
+        donate_argnums=(), meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# Bi-encoder (the paper's own architecture) — encode / retrieve cells
+# ---------------------------------------------------------------------------
+
+
+def biencoder_spec_cell(arch_id: str, shape: dict, mesh: Mesh, *,
+                        variant: str = "full", cost_layers: int = 1,
+                        encode_weights: str = "fsdp") -> StepSpec:
+    cfg = registry.get(arch_id).full_config()
+    knobs = {}
+    if variant == "cost":
+        knobs = dict(n_layers=cost_layers, layer_unroll=0, attn_unroll=0)
+    cfg = dataclasses.replace(cfg, remat=(shape["kind"] == "train"), **knobs)
+    kind = shape["kind"]
+    if kind == "train":
+        rules = shd.lm_train_rules()
+    elif encode_weights == "replicated":
+        # BERT-base is 110M params = 220 MB bf16: replicating beats
+        # per-layer FSDP gathers on the validator mesh (§Perf iter c2)
+        rules = shd.Rules({}, default=None)
+    else:
+        rules = shd.fsdp_only_rules()
+    shapes, axes = nn.abstract_init(tfm.init, jax.random.PRNGKey(0), cfg)
+    if kind != "train" and encode_weights == "replicated":
+        shapes = jax.tree_util.tree_map(
+            lambda l: SDS(l.shape, jnp.bfloat16)
+            if jnp.issubdtype(l.dtype, jnp.floating) else l, shapes)
+    params_sh = shd.tree_shardings(shapes, axes, rules, mesh)
+    dp = shd.batch_axes(mesh)
+    total = _count(shapes)
+
+    if kind == "train":
+        B, Lq, Lp, npsg = (shape["global_batch"], shape["q_len"],
+                           shape["p_len"], shape["n_passages"])
+        spec = biencoder_spec(cfg, q_max_len=Lq, p_max_len=Lp)
+        batch_abs = {"q_tokens": SDS((B, Lq), jnp.int32),
+                     "q_mask": SDS((B, Lq), jnp.bool_),
+                     "p_tokens": SDS((B, npsg, Lp), jnp.int32),
+                     "p_mask": SDS((B, npsg, Lp), jnp.bool_)}
+        batch_sh = {k: _named(mesh, P(dp)) for k in batch_abs}
+        opt = optim.adamw(2e-5)
+        opt_abs = jax.eval_shape(opt.init, shapes)
+        opt_sh = shd.opt_state_shardings(opt_abs, shapes, params_sh, mesh)
+        step = make_train_step(
+            lambda p, b: contrastive_loss(p, spec, b), opt)
+        tokens = B * (Lq + npsg * Lp)
+        meta = {"model_flops": 6.0 * total * tokens, "params": total,
+                "active_params": total, "tokens": tokens,
+                "optimizer": "adamw", "variant": variant}
+        return StepSpec(
+            cell=f"{arch_id}/train", kind="train", fn=step,
+            abstract_args=(shapes, opt_abs, batch_abs),
+            in_shardings=(params_sh, opt_sh, batch_sh),
+            out_shardings=(params_sh, opt_sh, _repl(mesh)),
+            donate_argnums=(0, 1), meta=meta)
+
+    if kind == "encode":
+        B, Lp = shape["batch"], shape["p_len"]
+        # corpus encoding is embarrassingly parallel: batch shards over the
+        # WHOLE mesh (data x model jointly).  Sharding over "data" only
+        # replicates each sequence across the 16 model-column devices —
+        # measured 16.6x redundant FLOPs (EXPERIMENTS.md §Perf iter c1).
+        row_all = tuple(a for a in ("pod", "data", "model")
+                        if a in mesh.axis_names)
+        batch_abs = (SDS((B, Lp), jnp.int32), SDS((B, Lp), jnp.bool_))
+        batch_sh = (_named(mesh, P(row_all)), _named(mesh, P(row_all)))
+        enc_rules = _act_rules(mesh)
+        enc_rules["act_batch"] = row_all
+
+        def encode_step(params, tokens, mask):
+            return tfm.encode(params, cfg, tokens, mask, "cls")
+
+        tokens = B * Lp
+        meta = {"model_flops": 2.0 * total * tokens, "params": total,
+                "active_params": total, "tokens": tokens, "variant": variant}
+        return StepSpec(
+            cell=f"{arch_id}/encode", kind="encode",
+            fn=_with_act(encode_step, mesh, enc_rules),
+            abstract_args=(shapes,) + batch_abs,
+            in_shardings=(params_sh,) + batch_sh,
+            out_shardings=_named(mesh, P(row_all)),
+            donate_argnums=(), meta=meta)
+
+    # retrieve: sharded exact MIPS over the encoded corpus
+    nq, corpus, dim, k = (shape["n_queries"], shape["corpus"], shape["dim"],
+                          shape["k"])
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    corpus = _pad_to(corpus, n_dev)
+    q_abs = SDS((_pad_to(nq, 1), dim), jnp.float32)
+    c_abs = SDS((corpus, dim), jnp.float32)
+    row = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+
+    unroll = 0 if variant == "cost" else 1
+
+    def retrieve_step(q, c):
+        # sharded exact MIPS: local top-k per corpus shard + hierarchical
+        # merge (DESIGN.md §2.1) — topk_exact's block reshape would lose the
+        # row sharding and replicate the 27 GiB corpus per device.
+        from repro.core.retrieval import topk_sharded
+        return topk_sharded(mesh, q, c, k=k, axis_names=row, block=65536)
+
+    meta = {"model_flops": 2.0 * nq * corpus * dim, "params": 0,
+            "active_params": 0, "tokens": nq, "variant": variant,
+            "corpus_padded": corpus}
+    return StepSpec(
+        cell=f"{arch_id}/retrieve", kind="retrieval", fn=_with_act(retrieve_step, mesh),
+        abstract_args=(q_abs, c_abs),
+        in_shardings=(_repl(mesh), _named(mesh, P(row))),
+        out_shardings=None,
+        donate_argnums=(), meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+_LM_KIND_BUILDER = {"train": lm_train_spec, "prefill": lm_prefill_spec,
+                    "decode": lm_decode_spec}
+
+
+def build_step(arch_id: str, shape_name: str, mesh: Mesh, *,
+               variant: str = "full", cost_layers: int = 1,
+               sp=None, serve_layout: str = "2d",
+               cfg_overrides: Optional[Dict[str, Any]] = None) -> StepSpec:
+    spec = registry.get(arch_id)
+    shape = spec.shapes[shape_name]
+    kw = dict(variant=variant, cost_layers=cost_layers)
+    if spec.family == "lm":
+        if shape["kind"] == "train":
+            if sp is not None:
+                kw["sp"] = sp
+            if cfg_overrides:
+                kw["cfg_overrides"] = cfg_overrides
+        else:
+            kw["serve_layout"] = serve_layout
+        s = _LM_KIND_BUILDER[shape["kind"]](arch_id, shape, mesh, **kw)
+    elif spec.family == "gnn":
+        s = gnn_train_spec(arch_id, shape, mesh, **kw)
+    elif spec.family == "recsys":
+        s = recsys_spec(arch_id, shape, mesh, **kw)
+    elif spec.family == "biencoder":
+        if cfg_overrides and "encode_weights" in (cfg_overrides or {}):
+            kw["encode_weights"] = cfg_overrides["encode_weights"]
+        s = biencoder_spec_cell(arch_id, shape, mesh, **kw)
+    else:
+        raise ValueError(spec.family)
+    s.cell = f"{arch_id}/{shape_name}"
+    return s
+
+
+def all_cells(include_paper_arch: bool = True):
+    archs = list(registry.ASSIGNED_ARCH_IDS)
+    if include_paper_arch:
+        archs.append("dr-bert-base")
+    out = []
+    for a in archs:
+        for sname in registry.get(a).shapes:
+            out.append((a, sname))
+    return out

@@ -1,0 +1,131 @@
+"""Training loop with checkpoint/restart, async saving, and metric logging.
+
+The trainer is the *producer* side of Asyncval: it trains, periodically
+commits checkpoints to ``ckpt_dir`` (two-phase commit), and never waits for
+validation.  The validator (``repro.core.validator``) is the consumer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import checkpoint as ckpt
+from repro.train.optim import Optimizer
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 10
+    ckpt_dir: Optional[str] = None
+    keep_last: int = 0              # 0 = keep all (validator may lag)
+    log_every: int = 10
+    async_save: bool = True
+    grad_accum: int = 1
+
+
+def make_train_step(loss_fn: Callable, optimizer: Optimizer,
+                    grad_accum: int = 1):
+    """Build a jit-able (params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``loss_fn(params, batch) -> (loss, metrics)``.  With grad_accum > 1 the
+    batch's leading axis is split into microbatches and gradients averaged
+    (lax.scan — compile size independent of accumulation factor).
+    """
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(params, opt_state, batch):
+        if grad_accum <= 1:
+            (loss, aux), grads = grad_fn(params, batch)
+        else:
+            def micro(carry, mb):
+                (l, a), g = grad_fn(params, mb)
+                acc_l, acc_g = carry
+                return (acc_l + l,
+                        jax.tree_util.tree_map(jnp.add, acc_g, g)), a
+            microbatches = jax.tree_util.tree_map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), auxs = jax.lax.scan(
+                micro, (jnp.zeros((), jnp.float32), zero_g), microbatches)
+            loss = loss / grad_accum
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+            aux = jax.tree_util.tree_map(lambda a: a[-1], auxs)
+        new_params, new_opt_state = optimizer.update(grads, opt_state, params)
+        metrics = {"loss": loss, **aux}
+        return new_params, new_opt_state, metrics
+
+    return step
+
+
+class Trainer:
+    """CPU-runnable end-to-end trainer (examples / integration tests).
+
+    Resumable: on construction it restores the latest committed checkpoint
+    (params, optimizer state, data cursor, RNG) if one exists — node failure
+    recovery is "restart the binary".
+    """
+
+    def __init__(self, cfg: TrainerConfig, loss_fn: Callable,
+                 optimizer: Optimizer, init_params: Any,
+                 batch_iter: Callable[[int], Any],
+                 logger: Optional[Any] = None):
+        self.cfg = cfg
+        self.loss_fn = loss_fn
+        self.optimizer = optimizer
+        self.batch_iter = batch_iter          # step -> batch (deterministic)
+        self.logger = logger
+        self.saver = ckpt.AsyncSaver()
+        self._step_fn = jax.jit(make_train_step(loss_fn, optimizer,
+                                                cfg.grad_accum))
+
+        self.step = 0
+        self.params = init_params
+        self.opt_state = optimizer.init(init_params)
+        if cfg.ckpt_dir:
+            latest = ckpt.latest_step(cfg.ckpt_dir)
+            if latest is not None:
+                state, extra = ckpt.restore(cfg.ckpt_dir, latest)
+                self.params = state["params"]
+                self.opt_state = state["opt_state"]
+                self.step = int(extra.get("step", latest))
+
+    def _save(self):
+        if not self.cfg.ckpt_dir:
+            return
+        state = {"params": self.params, "opt_state": self.opt_state}
+        extra = {"step": self.step, "wall_time": time.time()}
+        if self.cfg.async_save:
+            self.saver.save(self.cfg.ckpt_dir, self.step, state, extra)
+        else:
+            ckpt.save(self.cfg.ckpt_dir, self.step, state, extra)
+
+    def run(self, on_metrics: Optional[Callable[[int, dict], None]] = None):
+        history = []
+        while self.step < self.cfg.total_steps:
+            batch = self.batch_iter(self.step)
+            self.params, self.opt_state, metrics = self._step_fn(
+                self.params, self.opt_state, batch)
+            self.step += 1
+            if self.step % self.cfg.ckpt_every == 0 \
+                    or self.step == self.cfg.total_steps:
+                self._save()
+            if self.step % self.cfg.log_every == 0 or \
+                    self.step == self.cfg.total_steps:
+                m = {k: float(v) for k, v in metrics.items()}
+                history.append((self.step, m))
+                if self.logger is not None:
+                    self.logger.log(self.step, m)
+                if on_metrics is not None:
+                    on_metrics(self.step, m)
+        self.saver.wait()
+        return history

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS / device-count override here — smoke tests and benches
+# must see the single real CPU device.  Multi-device behaviour is tested via
+# subprocesses (tests/test_dryrun.py) so device count never leaks.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,119 @@
+"""The paper's CLI surface: splitter + validator, end to end over files."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+from repro.core.metrics import read_trec_run, write_trec_run
+from repro.data import corpus as corpus_lib
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.fixture(scope="module")
+def filespace(tmp_path_factory):
+    """corpus dir + query file + qrels + baseline run + toy checkpoints."""
+    base = tmp_path_factory.mktemp("cli")
+    ds = corpus_lib.synthetic_retrieval_dataset(0, n_passages=300,
+                                                n_queries=30)
+    cdir = base / "corpus"
+    cdir.mkdir()
+    corpus_lib.write_jsonl(str(cdir / "split0.jsonl"),
+                           dict(list(ds.corpus.items())[:150]))
+    corpus_lib.write_jsonl(str(cdir / "split1.jsonl"),
+                           dict(list(ds.corpus.items())[150:]))
+    qfile = base / "queries.jsonl"
+    corpus_lib.write_jsonl(str(qfile), ds.queries)
+    qrels = base / "qrels.txt"
+    with open(qrels, "w") as f:
+        for qid, docs in ds.qrels.items():
+            for did, g in docs.items():
+                f.write(f"{qid} 0 {did} {g}\n")
+    baseline = corpus_lib.lexical_baseline_run(ds, k=50)
+    run_path = base / "bm25.trec"
+    write_trec_run(str(run_path),
+                   {q: [d for d, _ in v] for q, v in baseline.items()},
+                   {q: [s for _, s in v] for q, v in baseline.items()},
+                   tag="bm25")
+
+    sys.path.insert(0, ROOT)
+    from benchmarks.common import toy_spec, train_toy_dr
+    spec = toy_spec(ds.vocab)
+    ckdir = base / "ckpts"
+    _, snaps = train_toy_dr(ds, spec, steps=40, snapshot_every=20)
+    for step, params in snaps:
+        ckpt.save(str(ckdir), step, {"params": params})
+    return {"base": base, "corpus_dir": cdir, "queries": qfile,
+            "qrels": qrels, "run": run_path, "ckpts": ckdir, "ds": ds}
+
+
+def test_splitter_cli(filespace):
+    from repro.core.splitter import main
+    outdir = filespace["base"] / "subset"
+    rc = main(["--candidate_dir", str(filespace["corpus_dir"]),
+               "--run_file", str(filespace["run"]),
+               "--qrel_file", str(filespace["qrels"]),
+               "--output_dir", str(outdir), "--depth", "10"])
+    assert rc == 0
+    subset = corpus_lib.read_jsonl(str(outdir / "subset_top10.jsonl"))
+    assert 0 < len(subset) < 300
+    golds = {d for q in filespace["ds"].qrels.values() for d in q}
+    assert golds <= set(subset)
+
+
+def toy_encoder_from_cli(args):
+    """--encoder hook used by test_validator_cli."""
+    sys.path.insert(0, ROOT)
+    from benchmarks.common import toy_spec
+    return toy_spec(503)
+
+
+def test_validator_cli_one_shot(filespace):
+    from repro.core.cli import main
+    outdir = filespace["base"] / "out"
+    rc = main(["--query_file", str(filespace["queries"]),
+               "--candidate_dir", str(filespace["corpus_dir"]),
+               "--ckpts_dir", str(filespace["ckpts"]),
+               "--qrel_file", str(filespace["qrels"]),
+               "--q_max_len", "10", "--p_max_len", "26",
+               "--metrics", "MRR@10", "Recall@100",
+               "--report_to", "csv", "jsonl",
+               "--run_name", "t", "--write_run",
+               "--output_dir", str(outdir),
+               "--run_file", str(filespace["run"]), "--depth", "10",
+               "--encoder", "tests.test_cli:toy_encoder_from_cli"])
+    assert rc == 0
+    assert (outdir / "t_metrics.csv").exists()
+    assert (outdir / "t_metrics.jsonl").exists()
+    assert (outdir / "t_ledger.jsonl").exists()
+    runs = [p for p in os.listdir(outdir) if p.endswith(".trec")]
+    assert len(runs) == 3                       # one per checkpoint
+    # idempotency: re-running validates nothing new, exits clean
+    rc2 = main(["--query_file", str(filespace["queries"]),
+                "--candidate_dir", str(filespace["corpus_dir"]),
+                "--ckpts_dir", str(filespace["ckpts"]),
+                "--qrel_file", str(filespace["qrels"]),
+                "--q_max_len", "10", "--p_max_len", "26",
+                "--output_dir", str(outdir),
+                "--encoder", "tests.test_cli:toy_encoder_from_cli"])
+    assert rc2 == 0
+
+
+def test_validator_cli_rerank_mode(filespace):
+    from repro.core.cli import main
+    outdir = filespace["base"] / "out_rr"
+    rc = main(["--query_file", str(filespace["queries"]),
+               "--candidate_dir", str(filespace["corpus_dir"]),
+               "--ckpts_dir", str(filespace["ckpts"]),
+               "--qrel_file", str(filespace["qrels"]),
+               "--q_max_len", "10", "--p_max_len", "26",
+               "--mode", "rerank", "--depth", "10",
+               "--run_file", str(filespace["run"]),
+               "--output_dir", str(outdir), "--max_num_valid", "2",
+               "--encoder", "tests.test_cli:toy_encoder_from_cli"])
+    assert rc == 0

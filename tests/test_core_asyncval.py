@@ -1,0 +1,259 @@
+"""The paper's core loop: watcher policies, samplers, validation pipeline,
+async validator (idempotency, crash tolerance, never-blocks-training)."""
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+from repro.core.pipeline import ValidationConfig, ValidationPipeline
+from repro.core.reporting import MemoryLogger
+from repro.core.samplers import (FullCorpus, QrelPool, RandomSubset,
+                                 RerankTopK, RunFileTopK, write_subset_jsonl)
+from repro.core.validator import AsyncValidator, ValidationLedger
+from repro.core.watcher import CheckpointWatcher, Policy
+from repro.data import corpus as synthetic_ds
+from repro.models import nn
+from repro.models.biencoder import EncoderSpec
+
+# ---------------------------------------------------------------------------
+# A tiny deterministic "encoder": bag-of-tokens projected by a param matrix.
+# Fast enough to validate dozens of checkpoints in seconds.
+# ---------------------------------------------------------------------------
+
+DIM = 32
+VOCAB = 503
+
+
+def _toy_encode(params, tokens, mask):
+    table = params["table"]                      # (VOCAB, DIM)
+    emb = jnp.take(table, tokens, axis=0)
+    m = mask.astype(emb.dtype)[..., None]
+    v = (emb * m).sum(1) / jnp.clip(m.sum(1), 1e-6)
+    return v / jnp.clip(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-6)
+
+
+def toy_spec():
+    return EncoderSpec(
+        name="toy", dim=DIM, encode_query=_toy_encode,
+        encode_passage=_toy_encode,
+        init=lambda rng: {"table": jax.random.normal(rng, (VOCAB, DIM))},
+        q_max_len=10, p_max_len=26)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return synthetic_ds.synthetic_retrieval_dataset(0, n_passages=400,
+                                                 n_queries=40, vocab=VOCAB)
+
+
+@pytest.fixture(scope="module")
+def baseline_run(ds):
+    return synthetic_ds.lexical_baseline_run(ds, k=50)
+
+
+# ---------------------------------------------------------------------------
+# Watcher
+# ---------------------------------------------------------------------------
+
+def test_watcher_fifo_and_mark_seen(tmp_path, ds):
+    root = str(tmp_path / "ck")
+    w = CheckpointWatcher(root)
+    assert w.poll() == []
+    for s in (30, 10, 20):
+        ckpt.save(root, s, {"x": jnp.zeros(1)})
+    assert w.poll() == [10, 20, 30]
+    assert w.poll() == []                        # seen once
+    ckpt.save(root, 40, {"x": jnp.zeros(1)})
+    assert w.poll() == [40]
+
+
+def test_watcher_latest_first_skips_stale(tmp_path):
+    root = str(tmp_path / "ck")
+    for s in (1, 2, 3):
+        ckpt.save(root, s, {"x": jnp.zeros(1)})
+    w = CheckpointWatcher(root, policy=Policy(kind="latest_first"))
+    assert w.poll() == [3]
+    assert w.poll() == []                        # 1, 2 marked stale
+
+
+def test_watcher_stride(tmp_path):
+    root = str(tmp_path / "ck")
+    for s in (10, 15, 20, 25, 30):
+        ckpt.save(root, s, {"x": jnp.zeros(1)})
+    w = CheckpointWatcher(root, policy=Policy(kind="stride", stride=10))
+    assert w.poll() == [10, 20, 30]
+
+
+# ---------------------------------------------------------------------------
+# Samplers (the paper's splitter + §2 strategies)
+# ---------------------------------------------------------------------------
+
+def test_runfile_topk_includes_golds_and_depth(ds, baseline_run):
+    sub = RunFileTopK(depth=5).sample(list(ds.corpus), baseline_run, ds.qrels)
+    ids = set(sub.doc_ids)
+    for qid, golds in ds.qrels.items():
+        for d in golds:
+            assert d in ids                      # golds always kept
+        for d, _ in baseline_run.get(qid, [])[:5]:
+            assert d in ids
+    assert len(ids) < len(ds.corpus)             # actually a subset
+
+
+def test_depth_monotonicity(ds, baseline_run):
+    sizes = [RunFileTopK(depth=d).sample(list(ds.corpus), baseline_run,
+                                         ds.qrels).size
+             for d in (1, 5, 20, 100)]
+    assert sizes == sorted(sizes)
+
+
+def test_rerank_topk_per_query_lists(ds, baseline_run):
+    sub = RerankTopK(depth=10).sample(list(ds.corpus), baseline_run, ds.qrels)
+    assert sub.per_query
+    for qid, cands in sub.per_query.items():
+        assert len(cands) == len(set(cands))     # de-duplicated
+        golds = [d for d, g in ds.qrels.get(qid, {}).items() if g > 0]
+        for g in golds:
+            assert g in cands
+
+
+def test_qrel_pool_sampler(ds, baseline_run):
+    sub = QrelPool(pool=7).sample(list(ds.corpus), baseline_run, ds.qrels)
+    for qid in baseline_run:
+        assert len(sub.per_query[qid]) <= 7 + len(ds.qrels.get(qid, {}))
+
+
+def test_random_subset_keeps_golds(ds):
+    sub = RandomSubset(n=50, seed=3).sample(list(ds.corpus), None, ds.qrels)
+    golds = {d for q in ds.qrels.values() for d in q}
+    assert golds <= set(sub.doc_ids)
+
+
+def test_write_subset_jsonl_roundtrip(tmp_path, ds, baseline_run):
+    from repro.data.corpus import read_jsonl
+    sub = RunFileTopK(depth=3).sample(list(ds.corpus), baseline_run, ds.qrels)
+    out = str(tmp_path / "subset.jsonl")
+    write_subset_jsonl(sub, ds.corpus, out)
+    loaded = read_jsonl(out)
+    assert set(loaded) == set(sub.doc_ids)
+    for did in sub.doc_ids:
+        assert loaded[did] == list(map(int, ds.corpus[did]))
+
+
+# ---------------------------------------------------------------------------
+# Pipeline (one-checkpoint validation), all three modes
+# ---------------------------------------------------------------------------
+
+def _pipeline(ds, baseline_run, mode="retrieval", sampler=None):
+    vcfg = ValidationConfig(metrics=("MRR@10", "Recall@100"), mode=mode,
+                            k=100, batch_size=64)
+    return ValidationPipeline(toy_spec(), ds.corpus, ds.queries, ds.qrels,
+                              vcfg, sampler=sampler, baseline_run=baseline_run)
+
+
+def test_pipeline_retrieval_mode(ds, baseline_run):
+    pipe = _pipeline(ds, baseline_run)
+    params = toy_spec().init(jax.random.PRNGKey(0))
+    res = pipe.validate_params(params, step=1)
+    assert 0.0 <= res.metrics["MRR@10"] <= 1.0
+    assert res.subset_size == len(ds.corpus)
+    assert res.timings["total_s"] > 0
+
+
+def test_pipeline_subset_faster_same_trend(ds, baseline_run):
+    """Subset validation encodes less and (for this oracle-ish baseline)
+    overestimates full-corpus MRR — the paper's Figure-2 structure."""
+    params = toy_spec().init(jax.random.PRNGKey(0))
+    full = _pipeline(ds, baseline_run).validate_params(params)
+    sub = _pipeline(ds, baseline_run,
+                    sampler=RunFileTopK(depth=10)).validate_params(params)
+    assert sub.subset_size < full.subset_size
+    assert sub.metrics["MRR@10"] >= full.metrics["MRR@10"] - 1e-9
+
+
+def test_pipeline_rerank_and_average_rank_modes(ds, baseline_run):
+    params = toy_spec().init(jax.random.PRNGKey(0))
+    rr = _pipeline(ds, baseline_run, mode="rerank",
+                   sampler=RerankTopK(depth=10)).validate_params(params)
+    assert rr.metrics["MRR@10"] >= 0.0
+    ar = _pipeline(ds, baseline_run, mode="average_rank",
+                   sampler=QrelPool(pool=10)).validate_params(params)
+    assert ar.metrics["AverageRank"] >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# AsyncValidator: idempotency, crash tolerance, GC protection
+# ---------------------------------------------------------------------------
+
+def _save_toy_ckpt(root, step, seed):
+    params = toy_spec().init(jax.random.PRNGKey(seed))
+    ckpt.save(root, step, {"params": params, "opt_state": {}},
+              extra={"step": step})
+
+
+def test_validator_validates_all_and_is_idempotent(tmp_path, ds, baseline_run):
+    root = str(tmp_path / "ck")
+    ledger = str(tmp_path / "ledger.jsonl")
+    for s in (10, 20, 30):
+        _save_toy_ckpt(root, s, s)
+    pipe = _pipeline(ds, baseline_run, sampler=RunFileTopK(depth=5))
+    v1 = AsyncValidator(root, pipe, ledger_path=ledger, logger=MemoryLogger())
+    assert v1.validate_pending() == 3
+    assert v1.ledger.validated_steps == [10, 20, 30]
+    # restart: a fresh validator over the same ledger re-validates nothing
+    v2 = AsyncValidator(root, pipe, ledger_path=ledger)
+    assert v2.validate_pending() == 0
+
+
+def test_validator_survives_broken_checkpoint(tmp_path, ds, baseline_run):
+    root = str(tmp_path / "ck")
+    _save_toy_ckpt(root, 1, 1)
+    # step 2: committed but structurally broken (garbage manifest arrays)
+    ckpt.save(root, 2, {"params": {"wrong": jnp.zeros((3,))}})
+    _save_toy_ckpt(root, 3, 3)
+    pipe = _pipeline(ds, baseline_run, sampler=RunFileTopK(depth=5))
+    v = AsyncValidator(root, pipe)
+    n = v.validate_pending()
+    assert n == 2                                 # 1 and 3 validated
+    assert [e[0] for e in v.errors] == [2]
+
+
+def test_validator_async_thread_and_protect_set(tmp_path, ds, baseline_run):
+    root = str(tmp_path / "ck")
+    pipe = _pipeline(ds, baseline_run, sampler=RunFileTopK(depth=5))
+    v = AsyncValidator(root, pipe, poll_interval_s=0.01,
+                       logger=MemoryLogger())
+    v.start()
+    for s in (5, 15):
+        _save_toy_ckpt(root, s, s)
+    v.stop(drain=True)                            # drains remaining work
+    assert v.ledger.validated_steps == [5, 15]
+    assert v.protect_set() == set()               # all validated -> GC free
+    _save_toy_ckpt(root, 25, 25)
+    assert v.protect_set() == {25}                # unvalidated -> protected
+
+
+def test_validator_max_num_valid(tmp_path, ds, baseline_run):
+    root = str(tmp_path / "ck")
+    for s in range(1, 6):
+        _save_toy_ckpt(root, s, s)
+    pipe = _pipeline(ds, baseline_run, sampler=RunFileTopK(depth=5))
+    v = AsyncValidator(root, pipe, max_num_valid=2)
+    v.validate_pending()
+    assert len(v.results) == 2
+
+
+def test_ledger_persistence(tmp_path):
+    path = str(tmp_path / "ledger.jsonl")
+    from repro.core.pipeline import ValidationResult
+    led = ValidationLedger(path)
+    led.record(ValidationResult(step=7, metrics={"MRR@10": 0.5},
+                                timings={"total_s": 1.0}, subset_size=10))
+    led2 = ValidationLedger(path)
+    assert 7 in led2
+    assert led2.validated_steps == [7]

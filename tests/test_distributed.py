@@ -1,0 +1,183 @@
+"""Sharding rules engine + fault-tolerance primitives."""
+
+import subprocess
+import sys
+import textwrap
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import fault
+from repro.distributed import sharding as shd
+
+# ---------------------------------------------------------------------------
+# spec_for: divisibility fallback + conflict dedup + stacked layers
+# ---------------------------------------------------------------------------
+
+
+class FakeMesh:
+    """Duck-typed mesh: only ``.shape`` (dict) and ``.axis_names`` used."""
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+MESH = FakeMesh(data=16, model=16)
+
+
+def test_spec_for_basic_tp_fsdp():
+    rules = shd.lm_train_rules()
+    assert shd.spec_for((8192, 1024), ("embed", "kv_heads"), rules, MESH) \
+        == P("data", "model")
+    assert shd.spec_for((8192, 22016), ("embed", "mlp"), rules, MESH) \
+        == P("data", "model")
+
+
+def test_spec_for_divisibility_fallback():
+    rules = shd.lm_train_rules()
+    # BERT vocab 30522 is not divisible by 16 -> falls through model AND
+    # data (30522 = 2 * 3 * 5087) -> replicated
+    assert shd.spec_for((30522, 768), ("vocab", "embed"), rules, MESH) \
+        == P(None, "data")
+    # qwen2 vocab divides 16 -> model
+    assert shd.spec_for((151936, 896), ("vocab", "embed"), rules, MESH) \
+        == P("model", "data")
+
+
+def test_spec_for_conflict_dedup():
+    rules = shd.lm_train_rules()
+    # MoE (expert, embed, mlp): expert wins "model"; mlp falls to replicated
+    assert shd.spec_for((128, 7168, 4864), ("expert", "embed", "mlp"),
+                        rules, MESH) == P("model", "data")
+
+
+def test_spec_for_stacked_leading_dims():
+    rules = shd.lm_train_rules()
+    # 3-D array with 2 logical axes -> leading scan-stack dim unsharded
+    assert shd.spec_for((95, 8192, 1024), ("embed", "kv_heads"), rules, MESH) \
+        == P(None, "data", "model")
+
+
+def test_spec_for_joint_axes():
+    rules = shd.fsdp_only_rules()
+    assert shd.spec_for((1024, 64), ("table_rows", "embed"), rules, MESH) \
+        == P(("data", "model"))              # trailing None trimmed
+    # second dim can't reuse consumed axes -> replicated
+    assert shd.spec_for((256, 256), ("a", "b"), rules, MESH) \
+        == P(("data", "model"))
+
+
+def test_opt_state_shardings_adam_and_adafactor():
+    from repro.train import optim
+    mesh = jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    params_abs = {"w": jax.ShapeDtypeStruct((64, 32), jnp.float32),
+                  "b": jax.ShapeDtypeStruct((32,), jnp.float32)}
+    param_sh = {"w": jax.NamedSharding(mesh, P("data", "model")),
+                "b": jax.NamedSharding(mesh, P("model"))}
+    adam_abs = jax.eval_shape(optim.adamw(1e-3).init, params_abs)
+    sh = shd.opt_state_shardings(adam_abs, params_abs, param_sh, mesh)
+    assert sh["m"]["w"].spec == P("data", "model")     # same-shape slot
+    assert sh["v"]["b"].spec == P("model")
+    assert sh["step"].spec == P()                      # scalar replicated
+    af_abs = jax.eval_shape(optim.adafactor(1e-3).init, params_abs)
+    sh = shd.opt_state_shardings(af_abs, params_abs, param_sh, mesh)
+    assert sh["slots"]["w"]["vr"].spec == P("data")    # (64,) = w minus dim 1
+    assert sh["slots"]["w"]["vc"].spec == P("model")   # (32,) = w minus dim 0
+
+
+def test_cache_spec_layouts():
+    # batch shardable -> batch on data, seq on model
+    assert shd.cache_spec(MESH, (95, 128, 32768, 8, 128), 128) \
+        == P(None, ("data",), "model")
+    # batch=1 -> sequence takes the whole mesh
+    assert shd.cache_spec(MESH, (95, 1, 524288, 8, 128), 1) \
+        == P(None, None, ("data", "model"))
+
+
+def test_lm_batch_spec():
+    assert shd.lm_batch_spec(MESH, 256) == P(("data",))
+    assert shd.lm_batch_spec(MESH, 7) == P()           # unshardable
+    multi = FakeMesh(pod=2, data=16, model=16)
+    assert shd.lm_batch_spec(multi, 256) == P(("pod", "data"))
+
+
+# ---------------------------------------------------------------------------
+# WorkQueue / straggler / fault injection
+# ---------------------------------------------------------------------------
+
+def test_make_chunks_over_decomposition():
+    chunks = fault.make_chunks(list(range(100)), n_workers=4, over_factor=4)
+    assert 13 <= len(chunks) <= 16
+    flat = [x for c in chunks for x in c.payload]
+    assert flat == list(range(100))
+
+
+def test_run_chunked_basic_order():
+    out = fault.run_chunked(list(range(50)), lambda xs: [x * 2 for x in xs],
+                            n_workers=3)
+    assert [x for c in out for x in c] == [x * 2 for x in range(50)]
+
+
+def test_run_chunked_with_straggler():
+    """One consistently slow worker must not serialize the job: speculation
+    re-executes its chunks elsewhere; results stay exact."""
+    delays = {"w0": 0.05, "w1": 0.0, "w2": 0.0, "w3": 0.0}
+    out = fault.run_chunked(list(range(40)), lambda xs: [x + 1 for x in xs],
+                            n_workers=4, worker_delay=lambda w: delays[w])
+    assert [x for c in out for x in c] == [x + 1 for x in range(40)]
+
+
+def test_run_chunked_with_injected_failures():
+    """Chunks that fail once are retried and complete."""
+    out = fault.run_chunked(list(range(30)), lambda xs: list(xs),
+                            n_workers=3, fail_once=(0, 2))
+    assert [x for c in out for x in c] == list(range(30))
+
+
+def test_workqueue_first_result_wins():
+    chunks = fault.make_chunks([1, 2, 3, 4], n_workers=1, over_factor=1)
+    q = fault.WorkQueue(chunks)
+    c = q.acquire("a")
+    # b speculates on the same chunk once the queue drains
+    c2 = q.acquire("b")
+    assert c2 is not None and c2.chunk_id == c.chunk_id
+    assert q.complete("a", c.chunk_id, "A") is True
+    assert q.complete("b", c.chunk_id, "B") is False   # loser discarded
+    assert q.results()[0].value == "A"
+    assert q.finished
+
+
+def test_workqueue_permanent_failure_surfaces():
+    chunks = fault.make_chunks([1], n_workers=1, over_factor=1)
+    q = fault.WorkQueue(chunks, max_attempts=2)
+    for _ in range(2):
+        c = q.acquire("w")
+        q.fail("w", c.chunk_id)
+    assert q.failed_chunks == [0]
+    with pytest.raises(RuntimeError):
+        fault.run_chunked([1], lambda x: x, n_workers=1,
+                          fail_once=())  # sanity: no failure -> fine
+        raise RuntimeError("unreachable-guard")
+
+
+def test_elastic_workers_join_mid_run():
+    """Workers joining after the queue is half-drained still help."""
+    chunks = fault.make_chunks(list(range(20)), n_workers=2, over_factor=2)
+    q = fault.WorkQueue(chunks)
+    # worker 1 processes half
+    for _ in range(2):
+        c = q.acquire("w1")
+        q.complete("w1", c.chunk_id, sum(c.payload))
+    # new worker joins (elasticity: acquire needs no registration)
+    while not q.finished:
+        c = q.acquire("w2")
+        if c is None:
+            break
+        q.complete("w2", c.chunk_id, sum(c.payload))
+    assert q.finished

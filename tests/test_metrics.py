@@ -1,0 +1,132 @@
+"""IR metrics + fidelity statistics: hand-computed cases and properties."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fidelity
+from repro.core import metrics as M
+
+QRELS = {"q1": {"d1": 1}, "q2": {"d9": 1, "d5": 2}, "q3": {"d7": 1}}
+RUN = {"q1": ["d3", "d1", "d2"],          # gold at rank 2
+       "q2": ["d5", "d2", "d9"],          # golds at ranks 1 and 3
+       "q3": ["d2", "d3", "d4"]}          # gold missing
+
+
+def test_mrr():
+    # (1/2 + 1/1 + 0) / 3
+    assert M.mrr_at_k(RUN, QRELS, 10) == pytest.approx((0.5 + 1.0) / 3)
+    assert M.mrr_at_k(RUN, QRELS, 1) == pytest.approx(1.0 / 3)
+
+
+def test_recall():
+    # q1: 1/1, q2: 2/2, q3: 0/1
+    assert M.recall_at_k(RUN, QRELS, 10) == pytest.approx(2 / 3)
+    assert M.recall_at_k(RUN, QRELS, 1) == pytest.approx((0 + 0.5 + 0) / 3)
+
+
+def test_success():
+    assert M.success_at_k(RUN, QRELS, 1) == pytest.approx(1 / 3)
+    assert M.success_at_k(RUN, QRELS, 3) == pytest.approx(2 / 3)
+
+
+def test_ndcg():
+    # q1: dcg = 1/log2(3), idcg = 1 -> 0.6309...
+    q1 = (2 ** 1 - 1) / math.log2(3)
+    # q2: dcg = (2^2-1)/log2(2) + (2^1-1)/log2(4) = 3 + 0.5
+    #     idcg = 3/log2(2) + 1/log2(3)
+    q2 = 3.5 / (3 + 1 / math.log2(3))
+    assert M.ndcg_at_k(RUN, QRELS, 10) == pytest.approx((q1 + q2 + 0) / 3)
+
+
+def test_average_rank():
+    # q1 -> 2, q2 -> 1, q3 -> missing = len+1 = 4
+    assert M.average_rank(RUN, QRELS) == pytest.approx((2 + 1 + 4) / 3)
+
+
+def test_parse_metric_and_compute_all():
+    out = M.compute_metrics(RUN, QRELS,
+                            ["MRR@10", "Recall@3", "nDCG@10", "Success@1",
+                             "AverageRank"])
+    assert set(out) == {"MRR@10", "Recall@3", "nDCG@10", "Success@1",
+                        "AverageRank"}
+    with pytest.raises(ValueError):
+        M.parse_metric("BogusMetric@5")
+
+
+def test_trec_run_roundtrip(tmp_path):
+    path = str(tmp_path / "run.trec")
+    scores = {q: [10.0 - i for i in range(len(docs))]
+              for q, docs in RUN.items()}
+    M.write_trec_run(path, RUN, scores, tag="test")
+    back = M.read_trec_run(path)
+    for q, docs in RUN.items():
+        assert [d for d, _ in back[q]] == docs
+
+
+def test_trec_qrels_io(tmp_path):
+    path = str(tmp_path / "qrels.txt")
+    with open(path, "w") as f:
+        for q, docs in QRELS.items():
+            for d, g in docs.items():
+                f.write(f"{q} 0 {d} {g}\n")
+    assert M.read_trec_qrels(path) == QRELS
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 30), min_size=2, max_size=20, unique=True))
+def test_mrr_bounded_and_monotone_in_k(ranks):
+    """MRR in [0,1] and non-decreasing in k."""
+    run = {"q": [f"d{i}" for i in ranks]}
+    qrels = {"q": {f"d{ranks[0]}": 1}}
+    vals = [M.mrr_at_k(run, qrels, k) for k in (1, 3, 5, 100)]
+    assert all(0.0 <= v <= 1.0 for v in vals)
+    assert vals == sorted(vals)
+
+
+# ---------------------------------------------------------------------------
+# fidelity statistics
+# ---------------------------------------------------------------------------
+
+def test_correlations_perfect_and_inverted():
+    a = [0.1, 0.2, 0.3, 0.4]
+    assert fidelity.spearman(a, a) == pytest.approx(1.0)
+    assert fidelity.spearman(a, a[::-1]) == pytest.approx(-1.0)
+    assert fidelity.kendall_tau(a, a) == pytest.approx(1.0)
+    assert fidelity.kendall_tau(a, a[::-1]) == pytest.approx(-1.0)
+    assert fidelity.pearson(a, [2 * x + 1 for x in a]) == pytest.approx(1.0)
+
+
+def test_best_checkpoint_agreement():
+    ref = [0.1, 0.3, 0.2]
+    assert fidelity.best_checkpoint_agreement(ref, [0.5, 0.9, 0.6])
+    assert not fidelity.best_checkpoint_agreement(ref, [0.9, 0.5, 0.6])
+    # lower-is-better (AverageRank)
+    assert fidelity.best_checkpoint_agreement([3, 1, 2], [30, 10, 20],
+                                              higher_is_better=False)
+
+
+def test_overestimation_report():
+    rep = fidelity.overestimation([0.1, 0.2], [0.15, 0.3])
+    assert rep["always_overestimates"] == 1.0
+    assert rep["mean_delta"] == pytest.approx(0.075)
+
+
+def test_fidelity_report_keys():
+    rep = fidelity.fidelity_report([0.1, 0.2, 0.3], [0.2, 0.25, 0.4])
+    for k in ("pearson", "spearman", "kendall_tau", "best_ckpt_agreement",
+              "mean_delta"):
+        assert k in rep
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-100, 100), min_size=3, max_size=15),
+       st.lists(st.floats(-100, 100), min_size=3, max_size=15))
+def test_correlation_bounds(a, b):
+    n = min(len(a), len(b))
+    a, b = a[:n], b[:n]
+    for fn in (fidelity.pearson, fidelity.spearman, fidelity.kendall_tau):
+        v = fn(a, b)
+        assert -1.0 - 1e-9 <= v <= 1.0 + 1e-9

@@ -1,0 +1,135 @@
+"""Per-arch smoke tests (reduced configs) + decode/cache consistency."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import nn
+from repro.models import transformer as tfm
+
+LM_ARCHS = ["deepseek-67b", "qwen2-0.5b", "qwen2-72b", "arctic-480b",
+            "deepseek-v2-lite-16b"]
+
+
+def _setup(arch, **overrides):
+    cfg = registry.get(arch).smoke_config()
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    params = nn.materialize(tfm.init(jax.random.PRNGKey(0), cfg))
+    return cfg, params
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_smoke_train_step(arch):
+    cfg, params = _setup(arch)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 1,
+                                cfg.vocab_size)
+    (loss, metrics), grads = jax.jit(jax.value_and_grad(
+        lambda p, b: tfm.lm_loss(p, cfg, b), has_aux=True))(
+            params, {"tokens": tokens})
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_smoke_output_shapes_no_nan(arch):
+    cfg, params = _setup(arch)
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (3, 16), 1,
+                                cfg.vocab_size)
+    hidden, _, _ = jax.jit(lambda p, t: tfm.forward(p, cfg, t))(params, tokens)
+    assert hidden.shape == (3, 16, cfg.d_model)
+    assert np.isfinite(np.asarray(hidden, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_decode_matches_full_forward(arch):
+    """prefill + decode_step must reproduce the full-sequence logits —
+    validates KV caches incl. the MLA absorbed-decode path."""
+    cfg, params = _setup(arch, compute_dtype=jnp.float32,
+                         moe_capacity_factor=8.0)  # no token dropping
+    B, S = 2, 10
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (B, S), 1,
+                                cfg.vocab_size)
+    hidden, _, _ = tfm.forward(params, cfg, tokens)
+    full_logits = tfm.logits(params, cfg, hidden)          # (B,S,V)
+
+    _, caches = tfm.prefill(params, cfg, tokens[:, :S - 1], max_len=S)
+    step_logits, _ = tfm.decode_step(params, cfg, caches, tokens[:, S - 1:],
+                                     jnp.asarray(S - 1))
+    np.testing.assert_allclose(np.asarray(step_logits[:, 0]),
+                               np.asarray(full_logits[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_attention_matches_dense():
+    cfg, params = _setup("deepseek-67b", compute_dtype=jnp.float32, q_chunk=5)
+    cfg_full = dataclasses.replace(cfg, q_chunk=1024)
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (2, 13), 1,
+                                cfg.vocab_size)
+    h1, _, _ = tfm.forward(params, cfg, tokens)
+    h2, _, _ = tfm.forward(params, cfg_full, tokens)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_xent_matches_full():
+    cfg, params = _setup("qwen2-0.5b", compute_dtype=jnp.float32)
+    cfg_chunk = dataclasses.replace(cfg, vocab_chunk=37)
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (2, 12), 1,
+                                cfg.vocab_size)
+    l1, _ = tfm.lm_loss(params, cfg, {"tokens": tokens})
+    l2, _ = tfm.lm_loss(params, cfg_chunk, {"tokens": tokens})
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity factor 1.0 some tokens drop but the layer stays finite."""
+    cfg, params = _setup("arctic-480b", moe_capacity_factor=1.0)
+    tokens = jax.random.randint(jax.random.PRNGKey(6), (2, 32), 1,
+                                cfg.vocab_size)
+    loss, _ = tfm.lm_loss(params, cfg, {"tokens": tokens})
+    assert np.isfinite(float(loss))
+
+
+def test_biencoder_encode_normalized():
+    cfg, params = _setup("dr-bert-base")
+    tokens = jax.random.randint(jax.random.PRNGKey(7), (4, 12), 1,
+                                cfg.vocab_size)
+    mask = jnp.ones((4, 12), bool)
+    for pooling in ("cls", "mean"):
+        emb = tfm.encode(params, cfg, tokens, mask, pooling)
+        assert emb.shape == (4, cfg.d_model)
+        np.testing.assert_allclose(np.linalg.norm(np.asarray(emb), axis=-1),
+                                   1.0, rtol=1e-4)
+
+
+def test_padding_mask_invariance():
+    """Padded positions must not change bi-encoder embeddings."""
+    cfg, params = _setup("dr-bert-base", compute_dtype=jnp.float32)
+    t1 = jax.random.randint(jax.random.PRNGKey(8), (2, 8), 1, cfg.vocab_size)
+    pad = jnp.zeros((2, 4), jnp.int32)
+    t2 = jnp.concatenate([t1, pad], axis=1)
+    m1 = jnp.ones((2, 8), bool)
+    m2 = jnp.concatenate([m1, jnp.zeros((2, 4), bool)], axis=1)
+    e1 = tfm.encode(params, cfg, t1, m1, "mean")
+    e2 = tfm.encode(params, cfg, t2, m2, "mean")
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_param_axes_metadata_complete():
+    """Every param leaf carries logical axes matching (or prefixed by) ndim."""
+    for arch in LM_ARCHS + ["dr-bert-base"]:
+        cfg = registry.get(arch).smoke_config()
+        shapes, axes = nn.abstract_init(tfm.init, jax.random.PRNGKey(0), cfg)
+        flat_s = jax.tree_util.tree_leaves(shapes)
+        flat_a = jax.tree_util.tree_leaves(
+            axes, is_leaf=lambda x: isinstance(x, tuple))
+        assert len(flat_s) == len(flat_a)
+        for s, a in zip(flat_s, flat_a):
+            assert s.ndim >= len(a), (arch, s.shape, a)

@@ -1,0 +1,177 @@
+"""Hypothesis property tests for system invariants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt import checkpoint as ckpt
+from repro.data.corpus import pad_batch
+from repro.models import nn
+from repro.models import transformer as tfm
+
+# ---------------------------------------------------------------------------
+# checkpoint: arbitrary pytrees round-trip exactly
+# ---------------------------------------------------------------------------
+
+_DTYPES = [np.float32, np.int32, np.float64, np.int8]
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(_DTYPES),
+                          st.lists(st.integers(1, 5), min_size=0,
+                                   max_size=3)),
+                min_size=1, max_size=6),
+       st.integers(0, 10_000))
+def test_checkpoint_roundtrip_property(leaf_specs, step):
+    import tempfile
+    root = tempfile.mkdtemp(prefix="ckprop_")
+    rng = np.random.default_rng(42)
+    tree = {f"k{i}": jnp.asarray(
+        rng.normal(size=tuple(shape)).astype(dt) * 10)
+        for i, (dt, shape) in enumerate(leaf_specs)}
+    ckpt.save(root, step, tree)
+    back, _ = ckpt.restore(root, step)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(tree[k]),
+                                      np.asarray(back[k]))
+        assert tree[k].dtype == back[k].dtype
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.lists(st.integers(1, 100), min_size=0, max_size=12),
+                min_size=1, max_size=8),
+       st.integers(1, 10))
+def test_pad_batch_property(token_lists, max_len):
+    toks, mask = pad_batch(token_lists, max_len)
+    assert toks.shape == mask.shape == (len(token_lists), max_len)
+    for i, t in enumerate(token_lists):
+        n = min(len(t), max_len)
+        assert mask[i, :n].all() and not mask[i, n:].any()
+        assert (toks[i, :n] == np.asarray(t[:n])).all()
+        assert (toks[i, n:] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# chunked xent == full xent for arbitrary shapes/chunks
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 4), st.integers(2, 9), st.integers(8, 40),
+       st.integers(1, 41))
+def test_chunked_xent_matches_full_property(B, S, V, chunk):
+    rng = np.random.default_rng(B * 100 + S)
+    D = 16
+    hidden = jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(D, V)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, V, (B, S)), jnp.int32)
+    mask = jnp.asarray(rng.random((B, S)) > 0.2)
+    if not bool(mask.any()):
+        mask = mask.at[0, 0].set(True)
+    chunked = tfm.chunked_softmax_xent(hidden, w, labels, mask, chunk)
+    lg = (hidden @ w).astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    lab = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    full = ((lse - lab) * mask).sum() / jnp.clip(mask.sum(), 1)
+    np.testing.assert_allclose(float(chunked), float(full), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 16), st.integers(2, 8), st.integers(1, 3),
+       st.integers(1, 6))
+def test_moe_dispatch_property(S, E, K, capacity):
+    K = min(K, E)
+    rng = np.random.default_rng(S * E + K)
+    D = 8
+    x = jnp.asarray(rng.normal(size=(S, D)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, E, (S, K)), jnp.int32)
+    gates = jnp.asarray(rng.random((S, K)), jnp.float32)
+    xe, slot_tok, slot_gate, slot_valid = tfm._moe_dispatch(
+        x, idx, gates, E, capacity)
+    assert xe.shape == (E, capacity, D)
+    sv = np.asarray(slot_valid)
+    stok = np.asarray(slot_tok)
+    # every valid slot holds the token's row exactly
+    xe_flat = np.asarray(xe).reshape(E * capacity, D)
+    for s in np.nonzero(sv)[0]:
+        np.testing.assert_allclose(xe_flat[s], np.asarray(x)[stok[s]],
+                                   rtol=1e-6)
+    # per-expert valid count never exceeds capacity, and equals
+    # min(capacity, assignments)
+    assign = np.zeros(E, np.int64)
+    for (e_row, g_row) in zip(np.asarray(idx), np.asarray(gates)):
+        for e in e_row:
+            assign[e] += 1
+    per_expert = sv.reshape(E, capacity).sum(1)
+    np.testing.assert_array_equal(per_expert, np.minimum(assign, capacity))
+
+
+def test_moe_block_high_capacity_equals_dense_mixture():
+    """With capacity high enough to drop nothing, the MoE output equals the
+    explicit gate-weighted mixture of expert MLPs."""
+    rng = np.random.default_rng(0)
+    cfg = tfm.TransformerConfig(d_model=16, moe_num_experts=4, moe_top_k=2,
+                                moe_d_ff=8, moe_capacity_factor=100.0,
+                                compute_dtype=jnp.float32,
+                                param_dtype=jnp.float32)
+    p = nn.materialize(tfm._moe_init(jax.random.PRNGKey(0), cfg))
+    x = jnp.asarray(rng.normal(size=(2, 6, 16)), jnp.float32)
+    out, aux = tfm._moe_block(p, x, cfg)
+
+    logits = x @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gates, idx = jax.lax.top_k(probs, 2)
+    gates = gates / gates.sum(-1, keepdims=True)
+
+    def expert(e, v):
+        h = jax.nn.silu(v @ p["w1"][e]) * (v @ p["w3"][e])
+        return h @ p["w2"][e]
+
+    ref = np.zeros_like(np.asarray(out))
+    for b in range(2):
+        for s in range(6):
+            for j in range(2):
+                e = int(idx[b, s, j])
+                ref[b, s] += float(gates[b, s, j]) * np.asarray(
+                    expert(e, x[b, s]))
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)
+    assert float(aux) > 0
+
+
+# ---------------------------------------------------------------------------
+# rope / norm invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 10), st.integers(1, 4),
+       st.sampled_from([8, 16, 32]))
+def test_rope_preserves_norm(B, S, H, d):
+    rng = np.random.default_rng(B + S)
+    x = jnp.asarray(rng.normal(size=(B, S, H, d)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    y = nn.apply_rope(x, pos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-4)
+    # position 0 is the identity
+    np.testing.assert_allclose(np.asarray(y[:, 0]), np.asarray(x[:, 0]),
+                               rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 8), st.sampled_from([4, 16, 64]))
+def test_rmsnorm_scale_invariance(B, D):
+    rng = np.random.default_rng(B * D)
+    p = nn.materialize(nn.rmsnorm_init(D))
+    x = jnp.asarray(rng.normal(size=(B, D)), jnp.float32)
+    y1 = nn.rmsnorm(p, x)
+    y2 = nn.rmsnorm(p, x * 1000.0)          # rms-norm is scale-invariant
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-3,
+                               atol=1e-5)
