@@ -1,0 +1,97 @@
+"""Streaming vs materialized validation engine: the memory/time win.
+
+The legacy path materializes the full (N, D) corpus embedding matrix on host
+(one ``np.asarray`` per batch) and copies it back to device for retrieval.
+The streaming engine fuses encode→top-k per chunk so peak embedding memory is
+``O(chunk x D + Q x k)`` regardless of N — corpora larger than host RAM
+become validatable.  This bench measures, at EQUAL chunk size (streaming
+chunk == legacy encode batch):
+
+  * wall-clock per checkpoint — streaming must be no worse (it skips the
+    device→host→device round trip and the (N, D) concat);
+  * the peak embedding footprint *implied by each path's data flow*
+    (analytic accounting, not a process measurement — the structural
+    guarantee that streaming never holds more than one chunk of embeddings
+    is enforced by the encoder-shape spy test in tests/test_engine.py);
+  * metric parity — both paths score identically.
+"""
+
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import toy_spec, train_toy_dr
+from repro.core.pipeline import ValidationConfig, ValidationPipeline
+from repro.data import corpus as corpus_lib
+
+
+def run(corpus_size: int = 8000, n_queries: int = 60, chunk: int = 256,
+        k: int = 100, seed: int = 0, repeats: int = 9):
+    ds = corpus_lib.synthetic_retrieval_dataset(
+        seed, n_passages=corpus_size, n_queries=n_queries)
+    spec = toy_spec(ds.vocab)
+    params, _ = train_toy_dr(ds, spec, steps=50, seed=seed)
+
+    engines = ("materialized", "streaming")
+    pipes = {}
+    for engine in engines:
+        vcfg = ValidationConfig(metrics=("MRR@10",), k=k, batch_size=chunk,
+                                chunk_size=chunk, engine=engine)
+        pipes[engine] = ValidationPipeline(spec, ds.corpus, ds.queries,
+                                           ds.qrels, vcfg)
+        pipes[engine].validate_params(params)      # warm-up (jit compile)
+
+    # interleave the engines per repeat so machine-load drift hits both
+    # equally; min-of-repeats then compares best-case against best-case.
+    times = {e: [] for e in engines}
+    results = {}
+    for r in range(repeats):
+        for engine in engines:
+            res = pipes[engine].validate_params(params, step=r)
+            times[engine].append(res.timings["total_s"])
+            results[engine] = res
+
+    rows = []
+    for engine in engines:
+        n, d, q = corpus_size, spec.dim, n_queries
+        # analytic footprint from the data-flow shapes (see module docstring)
+        peak = (n * d * 4 if engine == "materialized"
+                else chunk * d * 4 + q * k * 8)    # f32 emb + (f32,i32) carry
+        rows.append({"engine": engine, "total_s": min(times[engine]),
+                     "peak_emb_bytes": peak,
+                     "mrr": results[engine].metrics["MRR@10"]})
+    return rows, results
+
+
+def main():
+    rows, results = run()
+    print("name,engine,total_s,peak_emb_bytes,mrr")
+    for r in rows:
+        print(f"streaming_engine,{r['engine']},{r['total_s']:.3f},"
+              f"{r['peak_emb_bytes']},{r['mrr']:.4f}")
+    legacy = next(r for r in rows if r["engine"] == "materialized")
+    stream = next(r for r in rows if r["engine"] == "streaming")
+    ratio = stream["total_s"] / max(legacy["total_s"], 1e-9)
+    shrink = legacy["peak_emb_bytes"] / stream["peak_emb_bytes"]
+    print(f"streaming_engine,time_ratio_stream_over_legacy,{ratio:.3f},,")
+    print(f"streaming_engine,peak_memory_shrink_x,{shrink:.1f},,")
+    # metric parity with a 1e-6 epsilon: the two paths are separately
+    # compiled XLA programs, so a compiler upgrade may legally shift scores
+    # by an ulp and flip a near-tie rank (exact equality lives in
+    # tests/test_engine.py where both sides share one program structure).
+    for name, v in results["streaming"].metrics.items():
+        assert abs(v - results["materialized"].metrics[name]) < 1e-6, \
+            (name, v, results["materialized"].metrics[name])
+    assert stream["peak_emb_bytes"] < legacy["peak_emb_bytes"], \
+        "streaming peak embedding memory must be below the (N, D) matrix"
+    # wall-clock gate: 1.05 by default; CI runners are noisy shared tenants,
+    # so the workflow widens the slack rather than flaking unrelated PRs.
+    slack = float(os.environ.get("ASYNCVAL_BENCH_TIME_SLACK", "1.05"))
+    assert ratio <= slack, \
+        f"streaming wall-time must be no worse than legacy " \
+        f"(ratio={ratio:.3f} > slack={slack})"
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -19,13 +19,15 @@ from repro.data import corpus as corpus_lib
 
 
 def run(corpus_size: int = 4000, n_queries: int = 60,
-        depths=(5, 20, 50, 200), seed: int = 0, repeats: int = 3):
+        depths=(5, 20, 50, 200), seed: int = 0, repeats: int = 3,
+        engine: str = "streaming"):
     ds = corpus_lib.synthetic_retrieval_dataset(
         seed, n_passages=corpus_size, n_queries=n_queries)
     baseline = corpus_lib.lexical_baseline_run(ds, k=max(depths))
     spec = toy_spec(ds.vocab)
     params, _ = train_toy_dr(ds, spec, steps=50, seed=seed)
-    vcfg = ValidationConfig(metrics=("MRR@10",), k=100, batch_size=128)
+    vcfg = ValidationConfig(metrics=("MRR@10",), k=100, batch_size=128,
+                            engine=engine)
 
     rows = []
     samplers = [("full", FullCorpus())] + \
@@ -40,7 +42,8 @@ def run(corpus_size: int = 4000, n_queries: int = 60,
             res = pipe.validate_params(params, step=r)
             times.append(res.timings["total_s"])
             encode_times.append(res.timings["encode_corpus_s"])
-        rows.append({"subset": name, "size": pipe.subset.size,
+        rows.append({"engine": engine, "subset": name,
+                     "size": pipe.subset.size,
                      "total_s": min(times),
                      "encode_s": min(encode_times),
                      "mrr": res.metrics["MRR@10"]})
@@ -48,18 +51,24 @@ def run(corpus_size: int = 4000, n_queries: int = 60,
 
 
 def main():
-    rows = run()
-    print("name,subset,passages,total_s,encode_s,mrr")
-    for r in rows:
-        print(f"validation_time,{r['subset']},{r['size']},"
-              f"{r['total_s']:.3f},{r['encode_s']:.3f},{r['mrr']:.4f}")
-    full = next(r for r in rows if r["subset"] == "full")
-    small = min(rows, key=lambda r: r["size"])
-    print(f"validation_time,speedup_full_vs_smallest,"
-          f"{full['total_s']/max(small['total_s'],1e-9):.2f},,,")
-    assert small["total_s"] <= full["total_s"], \
-        "subset validation must be faster than full-corpus validation"
-    return rows
+    print("name,engine,subset,passages,total_s,encode_s,mrr")
+    by_engine = {}
+    for engine in ("streaming", "materialized"):
+        rows = by_engine[engine] = run(engine=engine)
+        for r in rows:
+            print(f"validation_time,{r['engine']},{r['subset']},{r['size']},"
+                  f"{r['total_s']:.3f},{r['encode_s']:.3f},{r['mrr']:.4f}")
+        full = next(r for r in rows if r["subset"] == "full")
+        small = min(rows, key=lambda r: r["size"])
+        print(f"validation_time,{engine},speedup_full_vs_smallest,"
+              f"{full['total_s']/max(small['total_s'],1e-9):.2f},,,")
+        assert small["total_s"] <= full["total_s"], \
+            "subset validation must be faster than full-corpus validation"
+    # both engines must agree on every subset's metric (same checkpoints;
+    # 1e-6: separately-compiled programs may differ by an ulp in scores)
+    for rs, rm in zip(by_engine["streaming"], by_engine["materialized"]):
+        assert abs(rs["mrr"] - rm["mrr"]) < 1e-6, (rs, rm)
+    return by_engine["streaming"]
 
 
 if __name__ == "__main__":

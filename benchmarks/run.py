@@ -15,7 +15,8 @@ import sys
 import time
 import traceback
 
-BENCHES = ("async_schedule", "fidelity", "validation_time", "mips_kernel")
+BENCHES = ("async_schedule", "fidelity", "validation_time",
+           "streaming_engine", "mips_kernel")
 
 
 def main() -> int:

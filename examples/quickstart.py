@@ -62,16 +62,24 @@ def main():
     for step, params in snapshots:
         ckpt.save(ckdir, step, {"params": params})
 
-    # -- 4. the closed loop: watch -> encode -> retrieve -> report ---------
+    # -- 4. the closed loop: watch -> stream encode→top-k -> report --------
+    # The default engine="streaming" fuses corpus encoding with the running
+    # top-k on device, chunk by chunk: the (N, D) embedding matrix is never
+    # materialized, so the corpus can outgrow host RAM.  chunk_size sets the
+    # streaming granularity (defaults to batch_size).
     corpus = corpus_lib.read_jsonl(corpus_path)       # round-trip the files
     queries = corpus_lib.read_jsonl(query_path)
     qrels = read_trec_qrels(qrel_path)
     pipe = ValidationPipeline(
         spec, corpus, queries, qrels,
         ValidationConfig(metrics=("MRR@10", "Recall@100"), k=100,
-                         batch_size=128, write_run=True,
+                         batch_size=128, engine="streaming", chunk_size=128,
+                         write_run=True,
                          output_dir=os.path.join(workdir, "runs")),
         sampler=RunFileTopK(depth=20), baseline_run=baseline)
+    print(f"[quickstart] engine: {pipe.engine.name} "
+          f"({pipe.engine.doc_store.n_chunks} corpus chunks of "
+          f"{pipe.engine.doc_store.chunk})")
     validator = AsyncValidator(
         ckdir, pipe, logger=CSVLogger(os.path.join(workdir, "metrics.csv")),
         ledger_path=os.path.join(workdir, "ledger.jsonl"))

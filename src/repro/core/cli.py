@@ -77,6 +77,11 @@ def main(argv=None) -> int:
     ap.add_argument("--report_to", nargs="+", default=["csv"],
                     choices=["csv", "jsonl", "tensorboard", "wandb"])
     ap.add_argument("--batch_size", type=int, default=64)
+    ap.add_argument("--engine", default="streaming",
+                    choices=["streaming", "materialized"],
+                    help="validation data path: fused streaming encode->top-k (default) or legacy encode-all-then-retrieve")
+    ap.add_argument("--chunk_size", type=int, default=None,
+                    help="streaming chunk rows (default: batch_size)")
     ap.add_argument("--fp16", action="store_true",
                     help="bf16 compute (TPU-native half precision)")
     ap.add_argument("--mode", default="retrieval",
@@ -124,6 +129,7 @@ def main(argv=None) -> int:
 
     vcfg = ValidationConfig(metrics=tuple(args.metrics), mode=args.mode,
                             k=args.retrieve_k, batch_size=args.batch_size,
+                            engine=args.engine, chunk_size=args.chunk_size,
                             write_run=args.write_run,
                             output_dir=args.output_dir,
                             run_tag=args.run_name)

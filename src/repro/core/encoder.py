@@ -14,6 +14,7 @@ single-process path below is what examples use.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Callable, Dict, List, Optional, Sequence
@@ -31,6 +32,37 @@ class EncodeStats:
     wall_time_s: float
 
 
+# Jit-wrapper cache keyed on encode_fn identity.  ``jax.jit`` gives every
+# wrapper its own trace cache, so re-wrapping per call (the old behaviour)
+# retraced + recompiled the encoder for every checkpoint.  LRU-bounded: the
+# jit wrapper strongly references its function, so weak keys would never be
+# collectable anyway; the bound caps what callers that mint a fresh closure
+# per checkpoint can leak.
+_JIT_CACHE: "collections.OrderedDict" = collections.OrderedDict()
+_JIT_CACHE_MAX = 32
+
+
+def jitted_encoder(encode_fn: Callable) -> Callable:
+    """Return the (cached) jitted wrapper for ``encode_fn``.
+
+    One compiled executable per encoder function, shared across checkpoints
+    and across the legacy/streaming paths.  Falls back to a fresh wrapper for
+    unhashable callables.
+    """
+    try:
+        fn = _JIT_CACHE.get(encode_fn)
+    except TypeError:
+        return jax.jit(encode_fn)
+    if fn is None:
+        fn = jax.jit(encode_fn)
+        _JIT_CACHE[encode_fn] = fn
+        if len(_JIT_CACHE) > _JIT_CACHE_MAX:
+            _JIT_CACHE.popitem(last=False)
+    else:
+        _JIT_CACHE.move_to_end(encode_fn)
+    return fn
+
+
 def encode_texts(encode_fn: Callable, params, texts: Sequence[Tokens], *,
                  max_len: int, batch_size: int,
                  donate: bool = False) -> tuple[np.ndarray, EncodeStats]:
@@ -42,7 +74,7 @@ def encode_texts(encode_fn: Callable, params, texts: Sequence[Tokens], *,
     """
     t0 = time.time()
     n = len(texts)
-    fn = jax.jit(encode_fn)
+    fn = jitted_encoder(encode_fn)
     out: List[np.ndarray] = []
     n_batches = 0
     for start in range(0, n, batch_size):

@@ -1,0 +1,512 @@
+"""Streaming device-resident ValidationEngine — encode→top-k with no host hop.
+
+The legacy ``ValidationPipeline`` path materialized the full ``(N, D)`` corpus
+embedding matrix on host (one ``np.asarray`` per batch), then shipped it back
+to device for retrieval: 2x the memory traffic and a hard host-RAM cap on
+corpus size.  This module replaces that with a staged, device-resident
+pipeline:
+
+  1. :class:`TokenStore` — the corpus is padded ONCE into fixed-shape
+     ``(chunk, L)`` token/mask chunks (the paper's §3 pre-tokenization
+     argument, extended to pre-padding: the cost amortizes across every
+     checkpoint the validator ever sees, and every chunk compiles to the
+     same XLA program).
+  2. A **fused encode→top-k streaming loop** — each chunk is encoded on
+     device and its scores are immediately folded into the running ``(Q, k)``
+     top-k carry inside one jitted step; the chunk's embedding buffer is an
+     XLA temporary, freed as soon as the step retires.  Peak embedding
+     memory is ``O(chunk x D + Q x k)`` — the ``(N, D)`` matrix is *never*
+     materialized, on host or device, so the corpus can exceed host RAM.
+  3. A shared :class:`Stage` interface through which every validation mode
+     (``retrieval``, ``rerank``, ``average_rank``) and every implementation
+     (``xla``, ``pallas`` via ``repro.kernels.topk_mips``, sharded via
+     ``shard_map`` on the validator mesh) is routed.
+
+``MaterializedEngine`` preserves the legacy encode-all-then-retrieve path
+behind the same interface for A/B benchmarking
+(``benchmarks/bench_streaming_engine.py``) and backward compatibility.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.encoder import encode_texts, jitted_encoder
+from repro.core.retrieval import (_hierarchical_topk_merge, _merge_topk,
+                                  pad_candidates, rerank_run, retrieve_run)
+from repro.data.corpus import Tokens, pad_batch
+from repro.distributed import compat
+
+Run = Dict[str, List[str]]
+Scores = Dict[str, List[float]]
+
+
+def _donate(*argnums: int) -> tuple:
+    """Donation positions for the top-k carry — skipped on CPU where XLA
+    cannot alias the buffers (it would only warn)."""
+    return () if jax.default_backend() == "cpu" else argnums
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: TokenStore — pad/chunk the corpus once, amortized over checkpoints
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TokenStore:
+    """Corpus tokens padded into fixed-shape device-friendly chunks.
+
+    ``tokens``/``mask`` are ``(n_chunks, chunk, L)`` host arrays; every chunk
+    has the same shape (the final ragged chunk is zero-padded and masked by
+    ``n_valid``), so the fused step compiles exactly once.
+    """
+
+    tokens: np.ndarray          # (n_chunks, chunk, L) int32
+    mask: np.ndarray            # (n_chunks, chunk, L) bool
+    chunk: int
+    n_texts: int
+
+    @classmethod
+    def build(cls, texts: Sequence[Tokens], *, max_len: int,
+              chunk: int) -> "TokenStore":
+        n = len(texts)
+        chunk = max(1, chunk)
+        n_chunks = -(-n // chunk) if n else 0
+        toks = np.zeros((n_chunks, chunk, max_len), np.int32)
+        mask = np.zeros((n_chunks, chunk, max_len), bool)
+        for ci in range(n_chunks):
+            part = list(texts[ci * chunk:(ci + 1) * chunk])
+            t, m = pad_batch(part, max_len)
+            toks[ci, :len(part)] = t
+            mask[ci, :len(part)] = m
+        return cls(tokens=toks, mask=mask, chunk=chunk, n_texts=n)
+
+    @property
+    def n_chunks(self) -> int:
+        return self.tokens.shape[0]
+
+    def rows_valid(self, ci: int) -> int:
+        return min(self.chunk, self.n_texts - ci * self.chunk)
+
+    def chunks(self) -> Iterator[Tuple[jnp.ndarray, jnp.ndarray, int, int]]:
+        """Yield (tokens, mask, base_row, n_valid_rows) per chunk."""
+        for ci in range(self.n_chunks):
+            yield (jnp.asarray(self.tokens[ci]), jnp.asarray(self.mask[ci]),
+                   ci * self.chunk, self.rows_valid(ci))
+
+
+def encode_store(encode_fn: Callable, params, store: TokenStore) -> jnp.ndarray:
+    """Encode a (small) TokenStore fully — used for queries, whose ``(Q, D)``
+    matrix is part of the streaming carry anyway.  Stays on device."""
+    fn = jitted_encoder(encode_fn)
+    outs = [fn(params, jnp.asarray(store.tokens[ci]),
+               jnp.asarray(store.mask[ci])) for ci in range(store.n_chunks)]
+    if not outs:
+        return jnp.zeros((0, 1), jnp.float32)
+    return jnp.concatenate(outs, axis=0)[:store.n_texts]
+
+
+# ---------------------------------------------------------------------------
+# Stage 2+3: fused encode→fold stages behind one interface
+# ---------------------------------------------------------------------------
+
+
+class Stage:
+    """One streaming validation strategy: a device carry folded chunk by chunk.
+
+    ``init(q_emb) -> carry``; ``step(params, q_emb, carry, toks, mask, base,
+    n_valid) -> carry``; ``finalize(carry) -> (run, run_scores)``.
+    """
+
+    name = "stage"
+
+    def init(self, q_emb: jnp.ndarray):
+        raise NotImplementedError
+
+    def step(self, params, q_emb, carry, toks, mask, base: int, n_valid: int):
+        raise NotImplementedError
+
+    def finalize(self, carry) -> Tuple[Run, Scores]:
+        raise NotImplementedError
+
+
+class StreamTopKStage(Stage):
+    """Retrieval mode, XLA path: encode a chunk and merge its local top-k into
+    the running (Q, k) carry in a single jitted (fused) step.
+
+    ``window`` > 1 additionally compiles a ``lax.scan`` over that many chunks
+    so the engine can fold a whole window of chunks per dispatch — same
+    per-chunk math in the same order (parity is preserved bit for bit), but
+    the Python/dispatch overhead amortizes ``window``-fold.  Token staging
+    grows to O(window x chunk x L); embeddings stay O(chunk x D).
+    """
+
+    name = "topk_xla"
+
+    def __init__(self, encode_fn: Callable, *, k: int, query_ids: List[str],
+                 doc_ids: List[str], window: int = 8):
+        self.query_ids = query_ids
+        self.doc_ids = doc_ids
+        self.k = max(1, min(k, len(doc_ids))) if doc_ids else 0
+        self.window = max(1, window)
+        k_carry = self.k
+
+        def fold(carry, q_emb, params, toks, mask, base, n_valid):
+            run_s, run_i = carry
+            emb = encode_fn(params, toks, mask)               # (chunk, D)
+            s = (q_emb @ emb.T).astype(jnp.float32)           # (Q, chunk)
+            chunk = toks.shape[0]
+            col = jnp.arange(chunk, dtype=jnp.int32)
+            s = jnp.where((col < n_valid)[None, :], s, -jnp.inf)
+            # single top_k over [carry ‖ chunk]: selecting top-k of the union
+            # directly is identical to local-top-k-then-merge (top-k of a set
+            # equals top-k of carry ∪ top-k(chunk)) but does one sort of
+            # width k+chunk instead of two of width chunk and 2k.
+            gcol = jnp.broadcast_to((col + base)[None, :], s.shape)
+            return _merge_topk(run_s, run_i, s, gcol, k_carry)
+
+        def fused(params, q_emb, run_s, run_i, toks, mask, base, n_valid):
+            return fold((run_s, run_i), q_emb, params, toks, mask, base,
+                        n_valid)
+
+        def fused_window(params, q_emb, run_s, run_i, toks_w, mask_w,
+                         bases, n_valids):
+            def body(carry, inp):
+                toks, mask, base, n_valid = inp
+                return fold(carry, q_emb, params, toks, mask, base,
+                            n_valid), None
+            carry, _ = jax.lax.scan(body, (run_s, run_i),
+                                    (toks_w, mask_w, bases, n_valids))
+            return carry
+
+        self._fused = jax.jit(fused, donate_argnums=_donate(2, 3))
+        self._fused_window = jax.jit(fused_window,
+                                     donate_argnums=_donate(2, 3))
+
+    def init(self, q_emb):
+        Q = q_emb.shape[0]
+        return (jnp.full((Q, self.k), -jnp.inf, jnp.float32),
+                jnp.zeros((Q, self.k), jnp.int32))
+
+    def step(self, params, q_emb, carry, toks, mask, base, n_valid):
+        run_s, run_i = carry
+        return self._fused(params, q_emb, run_s, run_i, toks, mask,
+                           jnp.asarray(base, jnp.int32),
+                           jnp.asarray(n_valid, jnp.int32))
+
+    def step_window(self, params, q_emb, carry, toks_w, mask_w, bases,
+                    n_valids):
+        """Fold ``window`` chunks in one dispatch (scan inside the jit)."""
+        run_s, run_i = carry
+        return self._fused_window(params, q_emb, run_s, run_i, toks_w,
+                                  mask_w, jnp.asarray(bases, jnp.int32),
+                                  jnp.asarray(n_valids, jnp.int32))
+
+    def finalize(self, carry):
+        run_s, run_i = np.asarray(carry[0]), np.asarray(carry[1])
+        run, scores = {}, {}
+        for qi, qid in enumerate(self.query_ids):
+            run[qid] = [self.doc_ids[j] for j in run_i[qi]]
+            scores[qid] = [float(s) for s in run_s[qi]]
+        return run, scores
+
+
+class PallasStreamTopKStage(StreamTopKStage):
+    """Retrieval mode, Pallas path: the chunk's local top-k runs in the
+    ``topk_mips`` Mosaic kernel (VMEM-resident running candidates), then the
+    chunk-carry merge folds it into the engine carry."""
+
+    name = "topk_pallas"
+
+    def __init__(self, encode_fn: Callable, *, k: int, query_ids: List[str],
+                 doc_ids: List[str]):
+        # window=1: every chunk must go through the Pallas kernel, not the
+        # XLA scan fallback.
+        super().__init__(encode_fn, k=k, query_ids=query_ids, doc_ids=doc_ids,
+                         window=1)
+        self._encode = jitted_encoder(encode_fn)
+
+    def step(self, params, q_emb, carry, toks, mask, base, n_valid):
+        from repro.kernels.topk_mips import ops as mips_ops
+        emb = self._encode(params, toks, mask)                # device-resident
+        run_s, run_i = carry
+        return mips_ops.topk_mips_chunk(q_emb, emb, run_s, run_i, base=base,
+                                        n_valid=n_valid)
+
+
+class ShardedStreamTopKStage(StreamTopKStage):
+    """Retrieval mode on the validator mesh: each chunk's rows are sharded
+    over ``axis_names``; every shard encodes and local-top-ks its rows, a
+    hierarchical all-gather merge (innermost axis first — same wire math as
+    ``retrieval.topk_sharded``) re-replicates the chunk candidates, and the
+    carry merge happens replicated.  The whole streaming step runs under one
+    ``shard_map``."""
+
+    name = "topk_sharded"
+
+    def __init__(self, encode_fn: Callable, mesh, *, k: int,
+                 query_ids: List[str], doc_ids: List[str],
+                 axis_names=None):
+        # window=1: the scan-window fast path is single-device XLA; every
+        # sharded chunk must go through the shard_map step below.
+        super().__init__(encode_fn, k=k, query_ids=query_ids,
+                         doc_ids=doc_ids, window=1)
+        axis_names = tuple(axis_names or mesh.axis_names)
+        k_carry = self.k
+        ax = axis_names[0] if len(axis_names) == 1 else axis_names
+
+        def local(params, q_emb, run_s, run_i, toks, mask, base, n_valid):
+            emb = encode_fn(params, toks, mask)               # (rows, D) local
+            rows = toks.shape[0]
+            shard = jax.lax.axis_index(ax)
+            s = (q_emb @ emb.T).astype(jnp.float32)           # (Q, rows)
+            col = shard * rows + jnp.arange(rows, dtype=jnp.int32)
+            s = jnp.where((col < n_valid)[None, :], s, -jnp.inf)
+            kk = min(k_carry, rows)
+            bs, pos = jax.lax.top_k(s, kk)
+            bi = jnp.take(col, pos) + base                    # global doc rows
+            bs, bi = _hierarchical_topk_merge(bs, bi, axis_names, k_carry)
+            return _merge_topk(run_s, run_i, bs, bi, k_carry)
+
+        spec_rows = P(ax)
+        # check=False: the carry is replicated-in, device-varying mid-step,
+        # re-replicated by the final merge — same legal pattern topk_sharded
+        # documents.
+        self._fused = jax.jit(compat.shard_map(
+            local, mesh=mesh,
+            in_specs=(P(), P(), P(), P(), spec_rows, spec_rows, P(), P()),
+            out_specs=(P(), P()), check=False))
+
+    def step(self, params, q_emb, carry, toks, mask, base, n_valid):
+        run_s, run_i = carry
+        return self._fused(params, q_emb, run_s, run_i, toks, mask,
+                           jnp.asarray(base, jnp.int32),
+                           jnp.asarray(n_valid, jnp.int32))
+
+
+class StreamRerankStage(Stage):
+    """Rerank / average-rank modes: the carry is the padded per-query
+    candidate score matrix (Q, Cmax); each chunk's scores are gathered into
+    it where the candidates' global rows fall inside the chunk."""
+
+    name = "rerank"
+
+    def __init__(self, encode_fn: Callable, *, k: int, query_ids: List[str],
+                 doc_ids: List[str], per_query: Dict[str, List[str]]):
+        self.query_ids = query_ids
+        self.k = k
+        cand_idx, self.cands = pad_candidates(query_ids, doc_ids, per_query)
+        self.cand_idx = jnp.asarray(cand_idx)
+
+        def fused(params, q_emb, cand_s, cand_idx, toks, mask, base, n_valid):
+            emb = encode_fn(params, toks, mask)               # (chunk, D)
+            s = (q_emb @ emb.T).astype(jnp.float32)           # (Q, chunk)
+            chunk = toks.shape[0]
+            local = cand_idx - base
+            hit = (cand_idx >= 0) & (local >= 0) & (local < n_valid)
+            g = jnp.take_along_axis(s, jnp.clip(local, 0, chunk - 1), axis=1)
+            return jnp.where(hit, g, cand_s)
+
+        self._fused = jax.jit(fused, donate_argnums=_donate(2,))
+
+    def init(self, q_emb):
+        Q = q_emb.shape[0]
+        return jnp.full((Q, self.cand_idx.shape[1]), -jnp.inf, jnp.float32)
+
+    def step(self, params, q_emb, carry, toks, mask, base, n_valid):
+        return self._fused(params, q_emb, carry, self.cand_idx, toks, mask,
+                           jnp.asarray(base, jnp.int32),
+                           jnp.asarray(n_valid, jnp.int32))
+
+    def finalize(self, carry):
+        s = np.asarray(carry)
+        order = np.argsort(-s, axis=1)
+        run, scores = {}, {}
+        for qi, qid in enumerate(self.query_ids):
+            keep = order[qi, :min(self.k, len(self.cands[qi]))]
+            run[qid] = [self.cands[qi][j] for j in keep]
+            scores[qid] = [float(s[qi, j]) for j in keep]
+        return run, scores
+
+
+def make_stage(encode_fn: Callable, *, mode: str, impl: str, k: int,
+               query_ids: List[str], doc_ids: List[str],
+               per_query: Optional[Dict[str, List[str]]] = None,
+               mesh=None, scan_window: int = 8) -> Stage:
+    """Route (mode, impl, mesh) to a Stage — the single dispatch point every
+    validation path goes through."""
+    if mode in ("rerank", "average_rank") and per_query:
+        return StreamRerankStage(encode_fn, k=max(k, 1000),
+                                 query_ids=query_ids, doc_ids=doc_ids,
+                                 per_query=per_query)
+    if impl == "pallas":
+        return PallasStreamTopKStage(encode_fn, k=k, query_ids=query_ids,
+                                     doc_ids=doc_ids)
+    if mesh is not None:
+        return ShardedStreamTopKStage(encode_fn, mesh, k=k,
+                                      query_ids=query_ids, doc_ids=doc_ids)
+    return StreamTopKStage(encode_fn, k=k, query_ids=query_ids,
+                           doc_ids=doc_ids, window=scan_window)
+
+
+# ---------------------------------------------------------------------------
+# Engines
+# ---------------------------------------------------------------------------
+
+
+class StreamingEngine:
+    """Drive a Stage over a TokenStore: the full validation data path with
+    peak embedding memory O(chunk x D + Q x k)."""
+
+    name = "streaming"
+
+    def __init__(self, spec, doc_store: TokenStore, query_store: TokenStore,
+                 stage: Stage):
+        self.spec = spec
+        self.doc_store = doc_store
+        self.query_store = query_store
+        self.stage = stage
+
+    def run(self, params) -> Tuple[Run, Scores, Dict[str, float]]:
+        t0 = time.time()
+        q_emb = encode_store(self.spec.encode_query, params, self.query_store)
+        q_emb.block_until_ready()
+        t_query = time.time() - t0
+
+        t0 = time.time()
+        store = self.doc_store
+        carry = self.stage.init(q_emb)
+        window = getattr(self.stage, "window", 1)
+        use_window = window > 1 and hasattr(self.stage, "step_window")
+        ci = 0
+        w = window
+        while ci < store.n_chunks:
+            # scan-window dispatch with a halving tail: a corpus of C chunks
+            # costs ~C/window + log2(window) dispatches and at most
+            # log2(window)+2 compiled programs (amortized across every
+            # checkpoint this engine ever validates).
+            while w > 1 and ci + w > store.n_chunks:
+                w //= 2
+            if use_window and w > 1:
+                bases = store.chunk * np.arange(ci, ci + w, dtype=np.int32)
+                n_valids = np.asarray([store.rows_valid(j) for j in
+                                       range(ci, ci + w)], np.int32)
+                carry = self.stage.step_window(
+                    params, q_emb, carry,
+                    jnp.asarray(store.tokens[ci:ci + w]),
+                    jnp.asarray(store.mask[ci:ci + w]), bases, n_valids)
+                ci += w
+            else:
+                carry = self.stage.step(
+                    params, q_emb, carry, jnp.asarray(store.tokens[ci]),
+                    jnp.asarray(store.mask[ci]), store.chunk * ci,
+                    store.rows_valid(ci))
+                ci += 1
+        jax.block_until_ready(carry)
+        t_stream = time.time() - t0
+
+        t0 = time.time()
+        run, scores = self.stage.finalize(carry)
+        t_final = time.time() - t0
+        # key names kept from the legacy path: the ledger/CSV schema is
+        # stable across engines.  encode_corpus_s is the fused loop (encode
+        # AND fold — they are one program now); retrieve_s is the host-side
+        # finalize only.
+        timings = {"encode_corpus_s": t_stream, "encode_query_s": t_query,
+                   "retrieve_s": t_final,
+                   "total_s": t_query + t_stream + t_final}
+        return run, scores, timings
+
+
+class MaterializedEngine:
+    """The legacy path — encode everything, then retrieve — behind the same
+    engine interface.  Kept for A/B benchmarks and as the fallback for
+    encoders that cannot stream (none known)."""
+
+    name = "materialized"
+
+    def __init__(self, spec, doc_texts: List[Tokens], query_texts: List[Tokens],
+                 *, mode: str, k: int, impl: str, batch_size: int,
+                 query_ids: List[str], doc_ids: List[str],
+                 per_query: Optional[Dict[str, List[str]]] = None, mesh=None):
+        self.spec = spec
+        self.doc_texts = doc_texts
+        self.query_texts = query_texts
+        self.mode = mode
+        self.k = k
+        self.impl = impl
+        self.batch_size = batch_size
+        self.query_ids = query_ids
+        self.doc_ids = doc_ids
+        self.per_query = per_query
+        self.mesh = mesh
+
+    def run(self, params) -> Tuple[Run, Scores, Dict[str, float]]:
+        t0 = time.time()
+        c_emb, _ = encode_texts(self.spec.encode_passage, params,
+                                self.doc_texts, max_len=self.spec.p_max_len,
+                                batch_size=self.batch_size)
+        t_corpus = time.time() - t0
+        t0 = time.time()
+        q_emb, _ = encode_texts(self.spec.encode_query, params,
+                                self.query_texts, max_len=self.spec.q_max_len,
+                                batch_size=self.batch_size)
+        t_query = time.time() - t0
+
+        t0 = time.time()
+        if self.mode in ("rerank", "average_rank") and self.per_query:
+            run, scores = rerank_run(self.query_ids, q_emb, self.doc_ids,
+                                     c_emb, self.per_query,
+                                     k=max(self.k, 1000))
+        else:
+            run, scores = retrieve_run(self.query_ids, q_emb, self.doc_ids,
+                                       c_emb, k=self.k, impl=self.impl,
+                                       mesh=self.mesh)
+        t_retrieve = time.time() - t0
+        timings = {"encode_corpus_s": t_corpus, "encode_query_s": t_query,
+                   "retrieve_s": t_retrieve,
+                   "total_s": t_corpus + t_query + t_retrieve}
+        return run, scores, timings
+
+
+def make_engine(spec, corpus_texts: List[Tokens], query_texts: List[Tokens],
+                *, engine: str, mode: str, k: int, impl: str, batch_size: int,
+                chunk_size: Optional[int], query_ids: List[str],
+                doc_ids: List[str],
+                per_query: Optional[Dict[str, List[str]]] = None, mesh=None,
+                scan_window: int = 8):
+    """Build the requested engine.  ``chunk_size`` defaults to ``batch_size``
+    (legacy-equivalent encode granularity); with a mesh it is rounded up to a
+    multiple of the shard count so every shard sees equal fixed-shape rows."""
+    if engine == "materialized":
+        return MaterializedEngine(spec, corpus_texts, query_texts, mode=mode,
+                                  k=k, impl=impl, batch_size=batch_size,
+                                  query_ids=query_ids, doc_ids=doc_ids,
+                                  per_query=per_query, mesh=mesh)
+    if engine != "streaming":
+        raise ValueError(f"unknown engine {engine!r} "
+                         "(expected 'streaming' or 'materialized')")
+    chunk = chunk_size or batch_size
+    chunk = max(1, min(chunk, max(len(corpus_texts), 1)))
+    use_mesh = mesh if mode not in ("rerank", "average_rank") or not per_query \
+        else None
+    if use_mesh is not None:
+        n_shards = int(np.prod([use_mesh.shape[a]
+                                for a in use_mesh.axis_names]))
+        chunk = -(-chunk // n_shards) * n_shards
+    doc_store = TokenStore.build(corpus_texts, max_len=spec.p_max_len,
+                                 chunk=chunk)
+    query_store = TokenStore.build(query_texts, max_len=spec.q_max_len,
+                                   chunk=batch_size)
+    stage = make_stage(spec.encode_passage, mode=mode, impl=impl, k=k,
+                       query_ids=query_ids, doc_ids=doc_ids,
+                       per_query=per_query, mesh=use_mesh,
+                       scan_window=scan_window)
+    return StreamingEngine(spec, doc_store, query_store, stage)

@@ -1,4 +1,4 @@
-"""ValidationPipeline — the closed loop the paper's users never implement.
+"""ValidationPipeline — thin façade over the streaming ValidationEngine.
 
 One validation of one checkpoint = encode (subset of) corpus + queries with
 the checkpoint's weights, retrieve, score.  Modes:
@@ -8,22 +8,23 @@ the checkpoint's weights, retrieve, score.  Modes:
   * ``average_rank``  — DPR-style pooled average-rank validation
 
 The corpus subset is computed ONCE (the sampler depends only on the baseline
-run + qrels, not the checkpoint), and the pre-tokenized texts are padded
-once — both costs amortize across checkpoints, exactly as the paper's
-pre-tokenization argument (§3) prescribes.
+run + qrels, not the checkpoint) and the pre-tokenized texts are padded once
+into the engine's TokenStore — both costs amortize across checkpoints,
+exactly as the paper's pre-tokenization argument (§3) prescribes.
+
+The data path itself lives in :mod:`repro.core.engine`: by default a fused
+encode→top-k streaming loop that never materializes the ``(N, D)`` corpus
+embedding matrix (``ValidationConfig.engine = "streaming"``); set
+``engine="materialized"`` for the legacy encode-all-then-retrieve path.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, Dict, List, Optional
-
-import numpy as np
+from typing import Any, Dict, Optional
 
 from repro.core import metrics as metrics_lib
-from repro.core import retrieval as retrieval_lib
-from repro.core.encoder import encode_texts
+from repro.core.engine import make_engine
 from repro.core.samplers import FullCorpus, SubsetResult
 from repro.models.biencoder import EncoderSpec
 
@@ -36,6 +37,9 @@ class ValidationConfig:
     batch_size: int = 64
     impl: str = "xla"                # xla | pallas
     mesh: Any = None                 # optional sharded retrieval mesh
+    engine: str = "streaming"        # streaming | materialized (legacy)
+    chunk_size: Optional[int] = None  # streaming chunk rows; None -> batch_size
+    scan_window: int = 8             # chunks folded per dispatch (xla stage)
     write_run: bool = False
     output_dir: Optional[str] = None
     run_tag: str = "asyncval"
@@ -53,7 +57,8 @@ class ValidationPipeline:
     def __init__(self, spec: EncoderSpec, corpus: Dict[str, list],
                  queries: Dict[str, list], qrels: Dict[str, Dict[str, int]],
                  vcfg: ValidationConfig, *, sampler=None,
-                 baseline_run: Optional[Dict[str, list]] = None):
+                 baseline_run: Optional[Dict[str, list]] = None,
+                 engine=None):
         self.spec = spec
         self.vcfg = vcfg
         self.qrels = qrels
@@ -65,33 +70,22 @@ class ValidationPipeline:
                                                    qrels)
         self.doc_ids = self.subset.doc_ids
         self.doc_texts = [corpus[d] for d in self.doc_ids]
+        self.engine = engine if engine is not None else make_engine(
+            spec, self.doc_texts, self.query_texts, engine=vcfg.engine,
+            mode=vcfg.mode, k=vcfg.k, impl=vcfg.impl,
+            batch_size=vcfg.batch_size, chunk_size=vcfg.chunk_size,
+            query_ids=self.query_ids, doc_ids=self.doc_ids,
+            per_query=self.subset.per_query, mesh=vcfg.mesh,
+            scan_window=vcfg.scan_window)
 
     # -- one checkpoint ----------------------------------------------------
-    def validate_params(self, params, step: int = 0) -> ValidationResult:
+    def validate_params(self, params, step: int = 0, *,
+                        engine=None) -> ValidationResult:
+        """Validate one checkpoint.  ``engine`` overrides the pipeline's
+        engine for this call only (the AsyncValidator injection path) —
+        the pipeline itself is never mutated."""
         v = self.vcfg
-        t0 = time.time()
-        c_emb, c_stats = encode_texts(self.spec.encode_passage, params,
-                                      self.doc_texts,
-                                      max_len=self.spec.p_max_len,
-                                      batch_size=v.batch_size)
-        t_corpus = time.time() - t0
-        t0 = time.time()
-        q_emb, _ = encode_texts(self.spec.encode_query, params,
-                                self.query_texts,
-                                max_len=self.spec.q_max_len,
-                                batch_size=v.batch_size)
-        t_query = time.time() - t0
-
-        t0 = time.time()
-        if v.mode in ("rerank", "average_rank") and self.subset.per_query:
-            run, scores = retrieval_lib.rerank_run(
-                self.query_ids, q_emb, self.doc_ids, c_emb,
-                self.subset.per_query, k=max(v.k, 1000))
-        else:
-            run, scores = retrieval_lib.retrieve_run(
-                self.query_ids, q_emb, self.doc_ids, c_emb, k=v.k,
-                impl=v.impl, mesh=v.mesh)
-        t_retrieve = time.time() - t0
+        run, scores, timings = (engine or self.engine).run(params)
 
         names = list(v.metrics)
         if v.mode == "average_rank" and "AverageRank" not in names:
@@ -105,9 +99,6 @@ class ValidationPipeline:
                 f"{v.output_dir}/{v.run_tag}_step{step}.trec", run, scores,
                 tag=v.run_tag)
 
-        timings = {"encode_corpus_s": t_corpus, "encode_query_s": t_query,
-                   "retrieve_s": t_retrieve,
-                   "total_s": t_corpus + t_query + t_retrieve}
         return ValidationResult(step=step, metrics=m, timings=timings,
                                 subset_size=len(self.doc_ids))
 

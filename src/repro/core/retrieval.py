@@ -25,6 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed import compat
+
 
 def _merge_topk(scores_a, idx_a, scores_b, idx_b, k: int):
     """Merge two (Q, ka/kb) candidate sets into (Q, k)."""
@@ -72,6 +74,23 @@ def topk_exact(q_emb: jnp.ndarray, c_emb: jnp.ndarray, *, k: int,
     return scores, idx
 
 
+def _hierarchical_topk_merge(s, i, axis_names, k: int):
+    """Reduce per-shard (Q, kk) candidates to the global (Q, <=k) top-k by
+    all-gathering one mesh axis at a time, innermost first.  A flat n-way
+    gather moves (n_shards-1) x Q x k candidate rows per device; two 16-way
+    levels move 2 x 15 x Q x k — ~8.5x less wire on the 16x16 mesh
+    (EXPERIMENTS.md §Perf).  Must run inside shard_map."""
+    for merge_ax in reversed(tuple(axis_names)):
+        all_s = jax.lax.all_gather(s, merge_ax, axis=0, tiled=False)
+        all_i = jax.lax.all_gather(i, merge_ax, axis=0, tiled=False)
+        Sn = all_s.shape[0] * all_s.shape[2]
+        flat_s = jnp.moveaxis(all_s, 0, 1).reshape(s.shape[0], Sn)
+        flat_i = jnp.moveaxis(all_i, 0, 1).reshape(s.shape[0], Sn)
+        s, pos = jax.lax.top_k(flat_s, min(k, Sn))
+        i = jnp.take_along_axis(flat_i, pos, axis=1)
+    return s, i
+
+
 def topk_sharded(mesh, q_emb, c_emb, *, k: int, axis_names=("data", "model"),
                  block: int = 4096):
     """Distributed exact top-k: corpus rows sharded over ``axis_names``.
@@ -90,28 +109,16 @@ def topk_sharded(mesh, q_emb, c_emb, *, k: int, axis_names=("data", "model"),
         shard_id = jax.lax.axis_index(ax)
         s, i = topk_exact(q, c_local, k=kk, block=block)
         i = i + shard_id * rows
-        # hierarchical tree merge, one mesh axis at a time (innermost
-        # first).  A flat 256-way gather moves (n_shards-1) x Q x k
-        # candidate rows per device; two 16-way levels move 2 x 15 x Q x k
-        # -- ~8.5x less wire on the 16x16 mesh (EXPERIMENTS.md §Perf).
-        for merge_ax in reversed(axis_names):
-            all_s = jax.lax.all_gather(s, merge_ax, axis=0, tiled=False)
-            all_i = jax.lax.all_gather(i, merge_ax, axis=0, tiled=False)
-            Sn = all_s.shape[0] * all_s.shape[2]
-            flat_s = jnp.moveaxis(all_s, 0, 1).reshape(q.shape[0], Sn)
-            flat_i = jnp.moveaxis(all_i, 0, 1).reshape(q.shape[0], Sn)
-            s, pos = jax.lax.top_k(flat_s, min(k, Sn))
-            i = jnp.take_along_axis(flat_i, pos, axis=1)
-        return s, i
+        return _hierarchical_topk_merge(s, i, axis_names, k)
 
     spec_c = P(axis_names if len(axis_names) > 1 else axis_names[0])
-    # check_vma=False: the inner lax.scan carry starts replicated and
-    # becomes device-varying after the first block — a legal pattern the
-    # varying-manual-axes checker can't type; outputs are re-replicated by
-    # the final merge anyway.
-    fn = jax.shard_map(local, mesh=mesh,
-                       in_specs=(P(), spec_c),
-                       out_specs=(P(), P()), check_vma=False)
+    # check=False (check_vma/check_rep): the inner lax.scan carry starts
+    # replicated and becomes device-varying after the first block — a legal
+    # pattern the varying-manual-axes checker can't type; outputs are
+    # re-replicated by the final merge anyway.
+    fn = compat.shard_map(local, mesh=mesh,
+                          in_specs=(P(), spec_c),
+                          out_specs=(P(), P()), check=False)
     return fn(q_emb, c_emb)
 
 
@@ -137,21 +144,40 @@ def retrieve_run(query_ids, q_emb, doc_ids, c_emb, *, k: int,
     return run, run_scores
 
 
+def pad_candidates(query_ids, doc_ids, per_query: dict):
+    """Per-query candidate lists -> a padded (Q, Cmax) matrix of corpus row
+    positions (-1 = padding), plus the filtered candidate id lists."""
+    doc_pos = {d: i for i, d in enumerate(doc_ids)}
+    cands = [[d for d in per_query.get(qid, []) if d in doc_pos]
+             for qid in query_ids]
+    c_max = max((len(c) for c in cands), default=0)
+    idx = np.full((len(query_ids), max(c_max, 1)), -1, np.int32)
+    for qi, row in enumerate(cands):
+        idx[qi, :len(row)] = [doc_pos[d] for d in row]
+    return idx, cands
+
+
 def rerank_run(query_ids, q_emb, doc_ids, c_emb, per_query: dict, *, k: int):
     """RocketQA-style re-rank validation: score only each query's candidate
-    list (no global top-k)."""
-    doc_pos = {d: i for i, d in enumerate(doc_ids)}
-    run, run_scores = {}, {}
-    c = np.asarray(c_emb)
+    list (no global top-k).
+
+    Vectorized: one padded (Q, Cmax, D) gather + a single batched matmul
+    replaces the per-query python loop (the old path re-indexed the corpus
+    matrix once per query).
+    """
     q = np.asarray(q_emb)
+    c = np.asarray(c_emb)
+    cand_idx, cands = pad_candidates(query_ids, doc_ids, per_query)
+    valid = cand_idx >= 0
+    if not valid.any():
+        return {qid: [] for qid in query_ids}, {qid: [] for qid in query_ids}
+    sub = c[np.clip(cand_idx, 0, max(len(doc_ids) - 1, 0))]   # (Q, Cmax, D)
+    s = np.einsum("qcd,qd->qc", sub, q)                       # (Q, Cmax)
+    s = np.where(valid, s, -np.inf)
+    order = np.argsort(-s, axis=1)
+    run, run_scores = {}, {}
     for qi, qid in enumerate(query_ids):
-        cands = [d for d in per_query.get(qid, []) if d in doc_pos]
-        if not cands:
-            run[qid], run_scores[qid] = [], []
-            continue
-        sub = c[[doc_pos[d] for d in cands]]
-        s = sub @ q[qi]
-        order = np.argsort(-s)[:k]
-        run[qid] = [cands[j] for j in order]
-        run_scores[qid] = [float(s[j]) for j in order]
+        keep = order[qi, :min(k, len(cands[qi]))]
+        run[qid] = [cands[qi][j] for j in keep]
+        run_scores[qid] = [float(s[qi, j]) for j in keep]
     return run, run_scores

@@ -62,9 +62,14 @@ class AsyncValidator:
                  ledger_path: Optional[str] = None,
                  poll_interval_s: float = 0.2,
                  params_extractor: Callable = params_from_checkpoint,
-                 shardings: Any = None):
+                 shardings: Any = None,
+                 engine: Any = None):
         self.ckpt_root = ckpt_root
         self.pipeline = pipeline
+        # engine injection: swap the validation data path (streaming /
+        # materialized / custom) for THIS validator's runs without rebuilding
+        # — or mutating — the pipeline's subset, stores, or metric plumbing.
+        self.engine = engine
         self.logger = logger
         self.watcher = CheckpointWatcher(ckpt_root, policy=policy)
         self.max_num_valid = max_num_valid
@@ -90,7 +95,8 @@ class AsyncValidator:
                 state, _ = ckpt.restore(self.ckpt_root, step,
                                         shardings=self.shardings)
                 params = self.params_extractor(state)
-                result = self.pipeline.validate_params(params, step=step)
+                result = self.pipeline.validate_params(params, step=step,
+                                                       engine=self.engine)
             except Exception as e:      # validation must never kill training
                 self.errors.append((step, repr(e)))
                 self.watcher.mark_seen(step)

@@ -1,0 +1,35 @@
+"""JAX version portability shims for the sharding API surface.
+
+The codebase targets the current ``jax.shard_map`` / ``jax.make_mesh``
+API; older JAX releases ship ``shard_map`` under ``jax.experimental``,
+call the replication checker ``check_rep`` instead of ``check_vma``, and
+have no ``axis_types`` argument.  Everything mesh-related routes through
+here so call sites stay on the modern spelling.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` across JAX versions (``check`` = check_vma/check_rep)."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check)
+        except TypeError:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check)
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    try:
+        auto = (jax.sharding.AxisType.Auto,) * len(axis_names)
+        return jax.make_mesh(axis_shapes, axis_names, axis_types=auto)
+    except (AttributeError, TypeError):
+        return jax.make_mesh(axis_shapes, axis_names)

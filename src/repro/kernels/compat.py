@@ -1,0 +1,13 @@
+"""JAX version shims shared by the Pallas kernels.
+
+``pltpu.CompilerParams`` was named ``TPUCompilerParams`` in older JAX
+releases; resolving the alias here keeps the kernels on one spelling
+without monkey-patching the third-party module.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

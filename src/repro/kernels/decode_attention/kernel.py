@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 _LANES = 128
 _NEG_INF = -1e30
 
@@ -104,7 +106,7 @@ def decode_attention_kernel(length, q, k, v, *, bk: int = 512,
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((B, KV, G, d), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(length, q, k, v)

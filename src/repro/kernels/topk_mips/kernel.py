@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _mips_kernel(q_ref, c_ref, out_s_ref, out_i_ref, run_s, run_i, *,
                  k: int, bn: int, n_total: int):
@@ -105,7 +107,7 @@ def topk_mips_kernel(q: jnp.ndarray, c: jnp.ndarray, *, k: int,
             pltpu.VMEM((bq, k), jnp.float32),
             pltpu.VMEM((bq, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(q, c)

@@ -8,6 +8,8 @@ kernel body in Python for correctness validation.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -19,13 +21,32 @@ def _pad_to(x: int, m: int) -> int:
 
 
 def topk_mips(q: jnp.ndarray, c: jnp.ndarray, *, k: int, bq: int = 128,
-              bn: int = 1024, interpret: bool | None = None):
-    """Exact top-k MIPS: q (Q, D) x c (N, D) -> (scores, indices) (Q, k)."""
+              bn: int = 1024, interpret: bool | None = None,
+              n_valid: int | None = None):
+    """Exact top-k MIPS: q (Q, D) x c (N, D) -> (scores, indices) (Q, k).
+
+    ``n_valid`` (static) marks how many leading corpus rows are real; trailing
+    rows (fixed-shape chunk padding from the streaming engine) are masked out
+    of the top-k.  Defaults to all rows.
+    """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    return _topk_mips_jit(q, c, k=k, bq=bq, bn=bn, interpret=interpret,
+                          n_valid=n_valid)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bq", "bn", "interpret",
+                                             "n_valid"))
+def _topk_mips_jit(q, c, *, k, bq, bn, interpret, n_valid):
+    # jitted end to end so the padding/slicing around the kernel compiles
+    # into one program — the streaming engine calls this once per corpus
+    # chunk, where eager per-call pads would dominate the hot loop.
     Q, D = q.shape
     N = c.shape[0]
-    k_eff = min(k, N)
+    if n_valid is None:
+        n_valid = N
+    n_valid = min(n_valid, N)
+    k_eff = min(k, n_valid)
     bq = min(bq, _pad_to(Q, 8))
     bn = min(bn, _pad_to(max(N, k_eff), 128))
     kp = k_eff                                     # k <= bn guaranteed below
@@ -36,6 +57,40 @@ def topk_mips(q: jnp.ndarray, c: jnp.ndarray, *, k: int, bq: int = 128,
     Np = _pad_to(N, bn)
     qp = jnp.pad(q, ((0, Qp - Q), (0, Dp - D)))
     cp = jnp.pad(c, ((0, Np - N), (0, Dp - D)))
-    scores, idx = topk_mips_kernel(qp, cp, k=kp, n_valid=N, bq=bq, bn=bn,
-                                   interpret=interpret)
+    scores, idx = topk_mips_kernel(qp, cp, k=kp, n_valid=n_valid, bq=bq,
+                                   bn=bn, interpret=interpret)
     return scores[:Q], idx[:Q]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _merge_carry(run_s, run_i, chunk_s, chunk_i, base, *, k: int):
+    """Fold a chunk-local top-k (indices relative to the chunk) into the
+    running (Q, k) carry.  ``base`` is dynamic — one compile per chunk shape,
+    not per chunk position."""
+    s = jnp.concatenate([run_s, chunk_s], axis=1)
+    i = jnp.concatenate([run_i, chunk_i + base], axis=1)
+    top_s, pos = jax.lax.top_k(s, k)
+    return top_s, jnp.take_along_axis(i, pos, axis=1)
+
+
+def topk_mips_chunk(q: jnp.ndarray, c_chunk: jnp.ndarray, run_s: jnp.ndarray,
+                    run_i: jnp.ndarray, *, base, n_valid: int | None = None,
+                    bq: int = 128, bn: int = 1024,
+                    interpret: bool | None = None):
+    """Chunk-carry entry point for the streaming ValidationEngine.
+
+    Computes the local top-k of one fixed-shape corpus chunk with the Pallas
+    kernel and merges it into the running ``(Q, k)`` carry — the chunk's
+    embeddings never leave the device and the full corpus scores are never
+    materialized.  ``base`` (dynamic) is the chunk's global row offset;
+    ``n_valid`` (static, at most two distinct values per corpus: full chunks
+    and the ragged tail) masks chunk padding rows.
+    """
+    k = run_s.shape[1]
+    n = c_chunk.shape[0] if n_valid is None else min(n_valid, c_chunk.shape[0])
+    if n <= 0:
+        return run_s, run_i
+    s, i = topk_mips(q, c_chunk, k=min(k, n), bq=bq, bn=bn,
+                     interpret=interpret, n_valid=n_valid)
+    return _merge_carry(run_s, run_i, s, i.astype(jnp.int32),
+                        jnp.asarray(base, jnp.int32), k=k)

@@ -176,6 +176,8 @@ class Measurement:
 
 def measure(compiled, world: int) -> Measurement:
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):     # older JAX: one dict per device
+        cost = cost[0] if cost else {}
     text = compiled.as_text()
     colls = parse_collectives(text, world)
     mem = None

@@ -4,4 +4,11 @@ import sys
 # NOTE: no XLA_FLAGS / device-count override here — smoke tests and benches
 # must see the single real CPU device.  Multi-device behaviour is tested via
 # subprocesses (tests/test_dryrun.py) so device count never leaks.
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+sys.path.insert(0, _SRC)
+# subprocess-based tests (forced multi-device) re-import repro in a child
+# interpreter: export the path so they work without a PYTHONPATH prefix.
+_existing = os.environ.get("PYTHONPATH", "")
+if _SRC not in _existing.split(os.pathsep):
+    os.environ["PYTHONPATH"] = \
+        _SRC + os.pathsep + _existing if _existing else _SRC

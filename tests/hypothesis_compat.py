@@ -1,0 +1,33 @@
+"""Optional-dependency guard for hypothesis (tier-1 must run without it).
+
+``pytest.importorskip`` at module scope would skip whole files, losing the
+plain (non-property) tests that share them; this shim instead degrades just
+the ``@given`` tests to per-test skips when hypothesis is absent.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategies:
+        def __getattr__(self, name):
+            def strategy(*args, **kwargs):
+                return None
+            return strategy
+
+    st = _Strategies()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (optional dependency)")(fn)
+        return deco

@@ -11,6 +11,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed import compat
 from repro.distributed import fault
 from repro.distributed import sharding as shd
 
@@ -73,9 +74,7 @@ def test_spec_for_joint_axes():
 
 def test_opt_state_shardings_adam_and_adafactor():
     from repro.train import optim
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     params_abs = {"w": jax.ShapeDtypeStruct((64, 32), jnp.float32),
                   "b": jax.ShapeDtypeStruct((32,), jnp.float32)}
     param_sh = {"w": jax.NamedSharding(mesh, P("data", "model")),
