@@ -82,6 +82,23 @@ def main(argv=None) -> int:
                     help="validation data path: fused streaming encode->top-k (default) or legacy encode-all-then-retrieve")
     ap.add_argument("--chunk_size", type=int, default=None,
                     help="streaming chunk rows (default: batch_size)")
+    ap.add_argument("--scan_window", type=int, default=8,
+                    help="chunks folded per dispatch in the streaming "
+                         "engine's scan-window fast path")
+    ap.add_argument("--staging", default="double_buffered",
+                    choices=["double_buffered", "sync"],
+                    help="host->device chunk staging: overlap the copy of "
+                         "chunk i+1 with chunk i's compute (default) or "
+                         "copy synchronously")
+    ap.add_argument("--token_backing", default="memory",
+                    choices=["memory", "mmap"],
+                    help="TokenStore backing: host RAM (default) or "
+                         "memory-mapped files for corpora whose tokens "
+                         "exceed host RAM")
+    ap.add_argument("--mmap_dir", default=None,
+                    help="cache dir for --token_backing mmap (default: "
+                         "<output_dir>/token_cache); built once, reused "
+                         "across checkpoints and restarts")
     ap.add_argument("--fp16", action="store_true",
                     help="bf16 compute (TPU-native half precision)")
     ap.add_argument("--mode", default="retrieval",
@@ -127,9 +144,16 @@ def main(argv=None) -> int:
     else:
         sampler = FullCorpus()
 
+    mmap_dir = args.mmap_dir
+    if args.token_backing == "mmap" and not mmap_dir:
+        mmap_dir = os.path.join(args.output_dir, "token_cache")
     vcfg = ValidationConfig(metrics=tuple(args.metrics), mode=args.mode,
                             k=args.retrieve_k, batch_size=args.batch_size,
                             engine=args.engine, chunk_size=args.chunk_size,
+                            scan_window=args.scan_window,
+                            staging=args.staging,
+                            token_backing=args.token_backing,
+                            mmap_dir=mmap_dir,
                             write_run=args.write_run,
                             output_dir=args.output_dir,
                             run_tag=args.run_name)

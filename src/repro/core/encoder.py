@@ -42,6 +42,28 @@ _JIT_CACHE: "collections.OrderedDict" = collections.OrderedDict()
 _JIT_CACHE_MAX = 32
 
 
+def cached_compiled(cache: "collections.OrderedDict", key,
+                    build: Callable[[], Callable],
+                    max_entries: int = _JIT_CACHE_MAX) -> Callable:
+    """Bounded-LRU memoization for compiled wrappers.
+
+    Shared by ``jitted_encoder`` and the streaming engine's sharded-encoder
+    cache so the eviction/unhashable-fallback policy lives in one place.
+    Unhashable keys get a fresh (uncached) build.
+    """
+    try:
+        fn = cache.get(key)
+    except TypeError:
+        return build()
+    if fn is None:
+        fn = cache[key] = build()
+        if len(cache) > max_entries:
+            cache.popitem(last=False)
+    else:
+        cache.move_to_end(key)
+    return fn
+
+
 def jitted_encoder(encode_fn: Callable) -> Callable:
     """Return the (cached) jitted wrapper for ``encode_fn``.
 
@@ -49,18 +71,8 @@ def jitted_encoder(encode_fn: Callable) -> Callable:
     and across the legacy/streaming paths.  Falls back to a fresh wrapper for
     unhashable callables.
     """
-    try:
-        fn = _JIT_CACHE.get(encode_fn)
-    except TypeError:
-        return jax.jit(encode_fn)
-    if fn is None:
-        fn = jax.jit(encode_fn)
-        _JIT_CACHE[encode_fn] = fn
-        if len(_JIT_CACHE) > _JIT_CACHE_MAX:
-            _JIT_CACHE.popitem(last=False)
-    else:
-        _JIT_CACHE.move_to_end(encode_fn)
-    return fn
+    return cached_compiled(_JIT_CACHE, encode_fn,
+                           lambda: jax.jit(encode_fn))
 
 
 def encode_texts(encode_fn: Callable, params, texts: Sequence[Tokens], *,

@@ -10,17 +10,27 @@ pipeline:
      ``(chunk, L)`` token/mask chunks (the paper's §3 pre-tokenization
      argument, extended to pre-padding: the cost amortizes across every
      checkpoint the validator ever sees, and every chunk compiles to the
-     same XLA program).
+     same XLA program).  With ``backing="mmap"`` the chunks live in
+     memory-mapped files on disk (built once, reused across checkpoints and
+     processes), so even the corpus *tokens* can exceed host RAM.
   2. A **fused encode→top-k streaming loop** — each chunk is encoded on
      device and its scores are immediately folded into the running ``(Q, k)``
      top-k carry inside one jitted step; the chunk's embedding buffer is an
      XLA temporary, freed as soon as the step retires.  Peak embedding
      memory is ``O(chunk x D + Q x k)`` — the ``(N, D)`` matrix is *never*
      materialized, on host or device, so the corpus can exceed host RAM.
-  3. A shared :class:`Stage` interface through which every validation mode
+  3. **Double-buffered host→device staging** (:func:`staged_batches`) — the
+     async ``jax.device_put`` of chunk ``i+1`` is issued while chunk ``i``'s
+     fused step is still in flight, for both the single-device and
+     ``shard_map`` paths (sharded chunks are placed with the row sharding
+     the step's ``in_specs`` expect, so no re-layout happens at dispatch).
+     Peak host-staged token memory is ``O(depth x window x chunk x L)``.
+  4. A shared :class:`Stage` interface through which every validation mode
      (``retrieval``, ``rerank``, ``average_rank``) and every implementation
      (``xla``, ``pallas`` via ``repro.kernels.topk_mips``, sharded via
-     ``shard_map`` on the validator mesh) is routed.
+     ``shard_map`` on the validator mesh) is routed.  Query encoding routes
+     through the same sharded path (``encode_store(mesh=...)``) so huge
+     query sets shard with the corpus.
 
 ``MaterializedEngine`` preserves the legacy encode-all-then-retrieve path
 behind the same interface for A/B benchmarking
@@ -29,16 +39,21 @@ behind the same interface for A/B benchmarking
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import hashlib
+import json
+import os
 import time
-from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
+                    Tuple)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core.encoder import encode_texts, jitted_encoder
+from repro.core.encoder import cached_compiled, encode_texts, jitted_encoder
 from repro.core.retrieval import (_hierarchical_topk_merge, _merge_topk,
                                   pad_candidates, rerank_run, retrieve_run)
 from repro.data.corpus import Tokens, pad_batch
@@ -59,34 +74,148 @@ def _donate(*argnums: int) -> tuple:
 # ---------------------------------------------------------------------------
 
 
+_STORE_META = "store_meta.json"
+_STORE_TOKENS = "tokens.int32.bin"
+_STORE_MASK = "mask.bool.bin"
+_STORE_VERSION = 1
+
+
+def _store_fingerprint(texts: Sequence[Tokens], *, max_len: int,
+                       chunk: int) -> str:
+    """Cheap content fingerprint for mmap-cache reuse: geometry plus a hash
+    of the first/last 16 texts.  Deliberately O(1) in corpus size — the
+    point of the cache is to NOT re-read millions of texts per checkpoint;
+    callers that mutate the middle of a corpus in place must use a fresh
+    ``cache_dir``."""
+    h = hashlib.sha1()
+    h.update(f"v{_STORE_VERSION}:{len(texts)}:{max_len}:{chunk}".encode())
+    edge = list(texts[:16]) + list(texts[-16:])
+    for t in edge:
+        h.update(np.asarray(list(t), np.int64).tobytes())
+        h.update(b"|")
+    return h.hexdigest()
+
+
 @dataclasses.dataclass
 class TokenStore:
     """Corpus tokens padded into fixed-shape device-friendly chunks.
 
     ``tokens``/``mask`` are ``(n_chunks, chunk, L)`` host arrays; every chunk
     has the same shape (the final ragged chunk is zero-padded and masked by
-    ``n_valid``), so the fused step compiles exactly once.
+    ``n_valid``), so the fused step compiles exactly once.  With
+    ``backing="mmap"`` they are read-only ``numpy.memmap`` views over files
+    in ``cache_dir`` and only the staged chunks ever occupy host RAM.
     """
 
     tokens: np.ndarray          # (n_chunks, chunk, L) int32
     mask: np.ndarray            # (n_chunks, chunk, L) bool
     chunk: int
     n_texts: int
+    backing: str = "memory"     # memory | mmap
+    cache_dir: Optional[str] = None
+    reused: bool = False        # mmap only: True when cache files were reused
 
     @classmethod
-    def build(cls, texts: Sequence[Tokens], *, max_len: int,
-              chunk: int) -> "TokenStore":
+    def build(cls, texts: Sequence[Tokens], *, max_len: int, chunk: int,
+              backing: str = "memory",
+              cache_dir: Optional[str] = None) -> "TokenStore":
+        """Pad ``texts`` into ``(n_chunks, chunk, max_len)`` token/mask arrays.
+
+        ``backing="memory"`` (default) holds both arrays in host RAM.
+
+        ``backing="mmap"`` spills them to memory-mapped files under
+        ``cache_dir`` (required), built once and reused by every later
+        ``build`` with the same geometry + content fingerprint — across
+        checkpoints AND across processes.  On-disk format (version 1):
+
+        * ``store_meta.json`` — ``{"version", "n_texts", "chunk", "max_len",
+          "n_chunks", "fingerprint"}``; written LAST, so a torn build (crash
+          mid-write) is never mistaken for a valid cache.
+        * ``tokens.int32.bin`` — raw C-order ``(n_chunks, chunk, max_len)``
+          little-endian int32, zero-padded past each text's length and past
+          ``n_texts`` in the final ragged chunk.
+        * ``mask.bool.bin`` — raw C-order ``(n_chunks, chunk, max_len)``
+          1-byte bool, ``True`` exactly on real token positions.
+
+        The build itself streams chunk by chunk, so peak host memory during
+        construction is ``O(chunk x max_len)`` regardless of corpus size;
+        afterwards the maps are reopened read-only (``mode="r"``) so the
+        cache cannot be corrupted by a stray write.
+        """
         n = len(texts)
         chunk = max(1, chunk)
         n_chunks = -(-n // chunk) if n else 0
-        toks = np.zeros((n_chunks, chunk, max_len), np.int32)
-        mask = np.zeros((n_chunks, chunk, max_len), bool)
-        for ci in range(n_chunks):
-            part = list(texts[ci * chunk:(ci + 1) * chunk])
-            t, m = pad_batch(part, max_len)
-            toks[ci, :len(part)] = t
-            mask[ci, :len(part)] = m
-        return cls(tokens=toks, mask=mask, chunk=chunk, n_texts=n)
+        shape = (n_chunks, chunk, max_len)
+        if backing == "memory":
+            toks = np.zeros(shape, np.int32)
+            mask = np.zeros(shape, bool)
+            for ci in range(n_chunks):
+                part = list(texts[ci * chunk:(ci + 1) * chunk])
+                t, m = pad_batch(part, max_len)
+                toks[ci, :len(part)] = t
+                mask[ci, :len(part)] = m
+            return cls(tokens=toks, mask=mask, chunk=chunk, n_texts=n)
+        if backing != "mmap":
+            raise ValueError(f"unknown TokenStore backing {backing!r} "
+                             "(expected 'memory' or 'mmap')")
+        if not cache_dir:
+            raise ValueError("TokenStore backing='mmap' needs a cache_dir")
+        os.makedirs(cache_dir, exist_ok=True)
+        meta_path = os.path.join(cache_dir, _STORE_META)
+        tok_path = os.path.join(cache_dir, _STORE_TOKENS)
+        mask_path = os.path.join(cache_dir, _STORE_MASK)
+        fp = _store_fingerprint(texts, max_len=max_len, chunk=chunk)
+        meta = {"version": _STORE_VERSION, "n_texts": n, "chunk": chunk,
+                "max_len": max_len, "n_chunks": n_chunks, "fingerprint": fp}
+        n_slots = int(np.prod(shape))
+        reused = False
+        if os.path.exists(meta_path):
+            try:
+                with open(meta_path) as f:
+                    reused = json.load(f) == meta
+            except ValueError:      # torn/truncated meta: rebuild, not crash
+                reused = False
+            # a valid marker alone is not enough: the bins must exist with
+            # exactly the bytes the marker promises (a partially copied or
+            # hand-cleaned cache_dir must rebuild, not crash or mis-map)
+            if reused and n_chunks:
+                try:
+                    reused = (os.path.getsize(tok_path) == n_slots * 4
+                              and os.path.getsize(mask_path) == n_slots)
+                except OSError:
+                    reused = False
+        if not reused and n_chunks:
+            # invalidate the old commit marker FIRST: if this rebuild dies
+            # mid-write, no stale meta can bless the half-rewritten bins
+            if os.path.exists(meta_path):
+                os.remove(meta_path)
+            wt = np.memmap(tok_path, dtype=np.int32, mode="w+", shape=shape)
+            wm = np.memmap(mask_path, dtype=bool, mode="w+", shape=shape)
+            for ci in range(n_chunks):
+                part = list(texts[ci * chunk:(ci + 1) * chunk])
+                t, m = pad_batch(part, max_len)
+                wt[ci] = 0
+                wm[ci] = False
+                wt[ci, :len(part)] = t
+                wm[ci, :len(part)] = m
+            wt.flush()
+            wm.flush()
+            del wt, wm
+        if not reused:
+            # commit marker: meta written LAST, and atomically (a crash
+            # mid-write must leave no half-valid marker behind)
+            tmp = meta_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(meta, f)
+            os.replace(tmp, meta_path)
+        if n_chunks:
+            toks = np.memmap(tok_path, dtype=np.int32, mode="r", shape=shape)
+            mask = np.memmap(mask_path, dtype=bool, mode="r", shape=shape)
+        else:
+            toks = np.zeros(shape, np.int32)
+            mask = np.zeros(shape, bool)
+        return cls(tokens=toks, mask=mask, chunk=chunk, n_texts=n,
+                   backing="mmap", cache_dir=cache_dir, reused=reused)
 
     @property
     def n_chunks(self) -> int:
@@ -102,15 +231,112 @@ class TokenStore:
                    ci * self.chunk, self.rows_valid(ci))
 
 
-def encode_store(encode_fn: Callable, params, store: TokenStore) -> jnp.ndarray:
-    """Encode a (small) TokenStore fully — used for queries, whose ``(Q, D)``
-    matrix is part of the streaming carry anyway.  Stays on device."""
-    fn = jitted_encoder(encode_fn)
-    outs = [fn(params, jnp.asarray(store.tokens[ci]),
-               jnp.asarray(store.mask[ci])) for ci in range(store.n_chunks)]
+# Sharded-encoder cache keyed on (encode_fn, mesh, axis_names) — one compiled
+# shard_map executable per encoder+mesh, shared across checkpoints (the same
+# per-checkpoint retrace bug ``jitted_encoder`` fixes for the 1-device path).
+# Bounded-LRU via encoder.cached_compiled, same policy as _JIT_CACHE.
+_SHARDED_ENC_CACHE: "collections.OrderedDict" = collections.OrderedDict()
+
+
+def _sharded_encoder(encode_fn: Callable, mesh,
+                     axis_names: Tuple[str, ...]) -> Callable:
+    ax = axis_names[0] if len(axis_names) == 1 else axis_names
+
+    def build():
+        return jax.jit(compat.shard_map(
+            encode_fn, mesh=mesh, in_specs=(P(), P(ax), P(ax)),
+            out_specs=P(ax), check=False))
+
+    return cached_compiled(_SHARDED_ENC_CACHE, (encode_fn, mesh, axis_names),
+                           build)
+
+
+def encode_store(encode_fn: Callable, params, store: TokenStore, *,
+                 mesh=None, axis_names=None) -> jnp.ndarray:
+    """Encode a TokenStore fully — used for queries, whose ``(Q, D)`` matrix
+    is part of the streaming carry anyway.  Stays on device.
+
+    With ``mesh`` the chunk rows are sharded over ``axis_names`` and each
+    shard encodes its rows under one ``shard_map`` — the same sharded stage
+    the corpus streams through, so huge query sets scale with the mesh
+    instead of capping on one device.  Requires ``store.chunk`` divisible by
+    the shard count (``make_engine`` rounds the query chunk up to that).
+    """
+    if mesh is None:
+        fn = jitted_encoder(encode_fn)
+        put = None
+    else:
+        from repro.distributed.sharding import rows_sharding
+        axis_names = tuple(axis_names or mesh.axis_names)
+        fn = _sharded_encoder(encode_fn, mesh, axis_names)
+        put = rows_sharding(mesh, axis_names)
+    outs = []
+    for toks, mask in staged_batches(store,
+                                     plan_schedule(store.n_chunks, 1),
+                                     sharding=put):
+        outs.append(fn(params, toks, mask))
     if not outs:
         return jnp.zeros((0, 1), jnp.float32)
     return jnp.concatenate(outs, axis=0)[:store.n_texts]
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: host→device staging — double-buffered device_put ahead of compute
+# ---------------------------------------------------------------------------
+
+
+def plan_schedule(n_chunks: int, window: int) -> List[Tuple[int, int]]:
+    """Dispatch schedule ``[(first_chunk, n_chunks_in_batch), ...]``.
+
+    ``window`` > 1 groups that many chunks per dispatch with a halving tail:
+    a corpus of C chunks costs ~C/window + log2(window) dispatches and at
+    most log2(window)+2 compiled programs (amortized across every checkpoint
+    the engine ever validates)."""
+    out: List[Tuple[int, int]] = []
+    ci, w = 0, max(1, window)
+    while ci < n_chunks:
+        while w > 1 and ci + w > n_chunks:
+            w //= 2
+        out.append((ci, w))
+        ci += w
+    return out
+
+
+def staged_batches(store: TokenStore, schedule: Sequence[Tuple[int, int]], *,
+                   sharding=None, depth: int = 2,
+                   _put: Callable = None) -> Iterator[Tuple[Any, Any]]:
+    """Yield ``(tokens, mask)`` device buffers for each schedule entry,
+    staged ``depth`` batches ahead of the consumer.
+
+    ``depth=1`` is synchronous staging (copy, then compute).  ``depth=2``
+    (default) is the double buffer: when batch ``i`` is yielded, batch
+    ``i+1``'s ``jax.device_put`` has already been issued, so the host→device
+    copy of the next chunk overlaps the fused encode→top-k step of the
+    current one — the consumer's compute dispatch returns before the copy is
+    needed.  Peak host-staged token memory is ``O(depth x w x chunk x L)``
+    (with a memory-backed store the whole corpus is resident anyway; with
+    ``backing="mmap"`` this bound is the engine's entire host token
+    footprint).
+
+    ``sharding`` (a ``Sharding``) places each batch directly in the layout
+    the consuming jitted step expects — for the ``shard_map`` stage the rows
+    land pre-sharded across the mesh, so dispatch does no re-layout.
+    """
+    put = _put or (lambda x: jax.device_put(x, sharding))
+    depth = max(1, depth)
+
+    def stage(ci: int, w: int) -> Tuple[Any, Any]:
+        if w == 1:
+            return put(store.tokens[ci]), put(store.mask[ci])
+        return put(store.tokens[ci:ci + w]), put(store.mask[ci:ci + w])
+
+    q: "collections.deque" = collections.deque()
+    idx = 0
+    while q or idx < len(schedule):
+        while idx < len(schedule) and len(q) < depth:
+            q.append(stage(*schedule[idx]))
+            idx += 1
+        yield q.popleft()
 
 
 # ---------------------------------------------------------------------------
@@ -283,6 +509,10 @@ class ShardedStreamTopKStage(StreamTopKStage):
             local, mesh=mesh,
             in_specs=(P(), P(), P(), P(), spec_rows, spec_rows, P(), P()),
             out_specs=(P(), P()), check=False))
+        # layout staged token chunks must be device_put with so the step's
+        # in_specs find them already resident (no re-layout at dispatch)
+        from repro.distributed.sharding import rows_sharding
+        self.input_sharding = rows_sharding(mesh, axis_names)
 
     def step(self, params, q_emb, carry, toks, mask, base, n_valid):
         run_s, run_i = carry
@@ -363,20 +593,30 @@ def make_stage(encode_fn: Callable, *, mode: str, impl: str, k: int,
 
 class StreamingEngine:
     """Drive a Stage over a TokenStore: the full validation data path with
-    peak embedding memory O(chunk x D + Q x k)."""
+    peak embedding memory O(chunk x D + Q x k) — and, with an mmap-backed
+    store, peak host token memory O(staging_depth x window x chunk x L)."""
 
     name = "streaming"
 
     def __init__(self, spec, doc_store: TokenStore, query_store: TokenStore,
-                 stage: Stage):
+                 stage: Stage, *, staging: str = "double_buffered",
+                 query_mesh=None, query_axis_names=None):
+        if staging not in ("double_buffered", "sync"):
+            raise ValueError(f"unknown staging {staging!r} "
+                             "(expected 'double_buffered' or 'sync')")
         self.spec = spec
         self.doc_store = doc_store
         self.query_store = query_store
         self.stage = stage
+        self.staging = staging
+        self.query_mesh = query_mesh
+        self.query_axis_names = query_axis_names
 
     def run(self, params) -> Tuple[Run, Scores, Dict[str, float]]:
         t0 = time.time()
-        q_emb = encode_store(self.spec.encode_query, params, self.query_store)
+        q_emb = encode_store(self.spec.encode_query, params, self.query_store,
+                             mesh=self.query_mesh,
+                             axis_names=self.query_axis_names)
         q_emb.block_until_ready()
         t_query = time.time() - t0
 
@@ -385,30 +625,24 @@ class StreamingEngine:
         carry = self.stage.init(q_emb)
         window = getattr(self.stage, "window", 1)
         use_window = window > 1 and hasattr(self.stage, "step_window")
-        ci = 0
-        w = window
-        while ci < store.n_chunks:
-            # scan-window dispatch with a halving tail: a corpus of C chunks
-            # costs ~C/window + log2(window) dispatches and at most
-            # log2(window)+2 compiled programs (amortized across every
-            # checkpoint this engine ever validates).
-            while w > 1 and ci + w > store.n_chunks:
-                w //= 2
-            if use_window and w > 1:
+        schedule = plan_schedule(store.n_chunks, window if use_window else 1)
+        # double buffer: batch i+1's device_put is already in flight when
+        # batch i's fused step dispatches (sync staging: depth=1 — copy,
+        # then compute; kept for A/B benchmarking).
+        batches = staged_batches(
+            store, schedule, depth=2 if self.staging == "double_buffered"
+            else 1, sharding=getattr(self.stage, "input_sharding", None))
+        for (ci, w), (toks, mask) in zip(schedule, batches):
+            if w > 1:
                 bases = store.chunk * np.arange(ci, ci + w, dtype=np.int32)
                 n_valids = np.asarray([store.rows_valid(j) for j in
                                        range(ci, ci + w)], np.int32)
-                carry = self.stage.step_window(
-                    params, q_emb, carry,
-                    jnp.asarray(store.tokens[ci:ci + w]),
-                    jnp.asarray(store.mask[ci:ci + w]), bases, n_valids)
-                ci += w
+                carry = self.stage.step_window(params, q_emb, carry, toks,
+                                               mask, bases, n_valids)
             else:
-                carry = self.stage.step(
-                    params, q_emb, carry, jnp.asarray(store.tokens[ci]),
-                    jnp.asarray(store.mask[ci]), store.chunk * ci,
-                    store.rows_valid(ci))
-                ci += 1
+                carry = self.stage.step(params, q_emb, carry, toks, mask,
+                                        store.chunk * ci,
+                                        store.rows_valid(ci))
         jax.block_until_ready(carry)
         t_stream = time.time() - t0
 
@@ -481,10 +715,16 @@ def make_engine(spec, corpus_texts: List[Tokens], query_texts: List[Tokens],
                 chunk_size: Optional[int], query_ids: List[str],
                 doc_ids: List[str],
                 per_query: Optional[Dict[str, List[str]]] = None, mesh=None,
-                scan_window: int = 8):
+                scan_window: int = 8, staging: str = "double_buffered",
+                token_backing: str = "memory",
+                mmap_dir: Optional[str] = None):
     """Build the requested engine.  ``chunk_size`` defaults to ``batch_size``
     (legacy-equivalent encode granularity); with a mesh it is rounded up to a
-    multiple of the shard count so every shard sees equal fixed-shape rows."""
+    multiple of the shard count so every shard sees equal fixed-shape rows.
+
+    ``token_backing="mmap"`` spills the corpus TokenStore to memory-mapped
+    files under ``mmap_dir`` (see :meth:`TokenStore.build`); ``staging``
+    picks double-buffered (default) vs synchronous host→device staging."""
     if engine == "materialized":
         return MaterializedEngine(spec, corpus_texts, query_texts, mode=mode,
                                   k=k, impl=impl, batch_size=batch_size,
@@ -495,18 +735,27 @@ def make_engine(spec, corpus_texts: List[Tokens], query_texts: List[Tokens],
                          "(expected 'streaming' or 'materialized')")
     chunk = chunk_size or batch_size
     chunk = max(1, min(chunk, max(len(corpus_texts), 1)))
+    q_chunk = max(1, batch_size)
     use_mesh = mesh if mode not in ("rerank", "average_rank") or not per_query \
         else None
     if use_mesh is not None:
         n_shards = int(np.prod([use_mesh.shape[a]
                                 for a in use_mesh.axis_names]))
         chunk = -(-chunk // n_shards) * n_shards
-    doc_store = TokenStore.build(corpus_texts, max_len=spec.p_max_len,
-                                 chunk=chunk)
+        # query chunks shard over the same mesh: equal fixed-shape rows too
+        q_chunk = -(-q_chunk // n_shards) * n_shards
+    if token_backing == "mmap" and not mmap_dir:
+        raise ValueError("token_backing='mmap' needs mmap_dir")
+    doc_store = TokenStore.build(
+        corpus_texts, max_len=spec.p_max_len, chunk=chunk,
+        backing=token_backing,
+        cache_dir=os.path.join(mmap_dir, "corpus_tokens") if mmap_dir
+        else None)
     query_store = TokenStore.build(query_texts, max_len=spec.q_max_len,
-                                   chunk=batch_size)
+                                   chunk=q_chunk)
     stage = make_stage(spec.encode_passage, mode=mode, impl=impl, k=k,
                        query_ids=query_ids, doc_ids=doc_ids,
                        per_query=per_query, mesh=use_mesh,
                        scan_window=scan_window)
-    return StreamingEngine(spec, doc_store, query_store, stage)
+    return StreamingEngine(spec, doc_store, query_store, stage,
+                           staging=staging, query_mesh=use_mesh)

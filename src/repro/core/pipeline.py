@@ -16,6 +16,10 @@ The data path itself lives in :mod:`repro.core.engine`: by default a fused
 encode→top-k streaming loop that never materializes the ``(N, D)`` corpus
 embedding matrix (``ValidationConfig.engine = "streaming"``); set
 ``engine="materialized"`` for the legacy encode-all-then-retrieve path.
+``token_backing="mmap"`` (+ ``mmap_dir``) spills the pre-padded corpus
+tokens to memory-mapped files so even the tokens can exceed host RAM, and
+``staging`` selects double-buffered (default) vs synchronous host→device
+chunk staging — both bit-for-bit identical to the in-memory sync path.
 """
 
 from __future__ import annotations
@@ -40,6 +44,9 @@ class ValidationConfig:
     engine: str = "streaming"        # streaming | materialized (legacy)
     chunk_size: Optional[int] = None  # streaming chunk rows; None -> batch_size
     scan_window: int = 8             # chunks folded per dispatch (xla stage)
+    staging: str = "double_buffered"  # double_buffered | sync host->device
+    token_backing: str = "memory"    # memory | mmap (out-of-core TokenStore)
+    mmap_dir: Optional[str] = None   # cache dir for token_backing="mmap"
     write_run: bool = False
     output_dir: Optional[str] = None
     run_tag: str = "asyncval"
@@ -76,7 +83,8 @@ class ValidationPipeline:
             batch_size=vcfg.batch_size, chunk_size=vcfg.chunk_size,
             query_ids=self.query_ids, doc_ids=self.doc_ids,
             per_query=self.subset.per_query, mesh=vcfg.mesh,
-            scan_window=vcfg.scan_window)
+            scan_window=vcfg.scan_window, staging=vcfg.staging,
+            token_backing=vcfg.token_backing, mmap_dir=vcfg.mmap_dir)
 
     # -- one checkpoint ----------------------------------------------------
     def validate_params(self, params, step: int = 0, *,

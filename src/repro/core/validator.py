@@ -63,7 +63,8 @@ class AsyncValidator:
                  poll_interval_s: float = 0.2,
                  params_extractor: Callable = params_from_checkpoint,
                  shardings: Any = None,
-                 engine: Any = None):
+                 engine: Any = None,
+                 max_retries: int = 2):
         self.ckpt_root = ckpt_root
         self.pipeline = pipeline
         # engine injection: swap the validation data path (streaming /
@@ -81,6 +82,12 @@ class AsyncValidator:
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self.errors: List[tuple] = []
+        # failed-step retry budget: a checkpoint that fails validation is
+        # requeued (the watcher marked it seen when poll() handed it out, so
+        # without this it would be permanently swallowed); after max_retries
+        # re-attempts it is given up on and stays in ``errors``.
+        self.max_retries = max_retries
+        self._failures: Dict[int, int] = {}
 
     # -- core single-pass --------------------------------------------------
     def validate_pending(self) -> int:
@@ -99,8 +106,14 @@ class AsyncValidator:
                                                        engine=self.engine)
             except Exception as e:      # validation must never kill training
                 self.errors.append((step, repr(e)))
-                self.watcher.mark_seen(step)
+                n_fail = self._failures.get(step, 0) + 1
+                self._failures[step] = n_fail
+                if n_fail <= self.max_retries:
+                    self.watcher.requeue(step)   # retry on a later poll
+                else:
+                    self.watcher.mark_seen(step)
                 continue
+            self._failures.pop(step, None)
             self.ledger.record(result)
             self.results.append(result)
             if self.logger is not None:

@@ -61,3 +61,13 @@ class CheckpointWatcher:
 
     def mark_seen(self, step: int) -> None:
         self._seen.add(step)
+
+    def requeue(self, step: int) -> None:
+        """Make ``step`` visible to the next :meth:`poll` again.
+
+        ``poll`` marks a step seen the moment it is *handed out*, before the
+        caller knows whether validation succeeded — a checkpoint that fails
+        (torn filesystem read, transient OOM) would otherwise be permanently
+        swallowed.  The validator calls this on failure so the step is
+        retried on a later poll."""
+        self._seen.discard(step)

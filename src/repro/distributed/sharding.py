@@ -200,6 +200,18 @@ def fsdp_only_rules() -> Rules:
 # -- input/activation specs --------------------------------------------------
 
 
+def rows_sharding(mesh: Mesh,
+                  axis_names: Optional[Sequence[str]] = None) -> NamedSharding:
+    """NamedSharding splitting an array's leading (rows) dim over the given
+    mesh axes (jointly when several).  This is the layout the streaming
+    validation engine stages token chunks with (``jax.device_put`` ahead of
+    compute) so the ``shard_map`` step's row-sharded ``in_specs`` find the
+    buffers already resident — no re-layout or gather at dispatch."""
+    axes = tuple(axis_names or mesh.axis_names)
+    ax = axes[0] if len(axes) == 1 else axes
+    return NamedSharding(mesh, P(ax))
+
+
 def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
     """Mesh axes used for data parallelism ("pod" joins "data" if present)."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -104,6 +104,42 @@ def test_validator_cli_one_shot(filespace):
     assert rc2 == 0
 
 
+def test_validator_cli_staging_and_mmap_flags(filespace):
+    """--scan_window / --staging / --token_backing / --mmap_dir are exposed
+    and forwarded into ValidationConfig; the mmap token cache lands under
+    the output dir and scores match the default in-memory run."""
+    import csv
+
+    from repro.core.cli import main
+
+    def read_mrr(outdir):
+        with open(outdir / "t_metrics.csv") as f:
+            return [row["MRR@10"] for row in csv.DictReader(f)]
+
+    common = ["--query_file", str(filespace["queries"]),
+              "--candidate_dir", str(filespace["corpus_dir"]),
+              "--ckpts_dir", str(filespace["ckpts"]),
+              "--qrel_file", str(filespace["qrels"]),
+              "--q_max_len", "10", "--p_max_len", "26",
+              "--run_name", "t",
+              "--encoder", "tests.test_cli:toy_encoder_from_cli"]
+    out_mm = filespace["base"] / "out_mmap"
+    rc = main(common + ["--output_dir", str(out_mm),
+                        "--scan_window", "4",
+                        "--staging", "double_buffered",
+                        "--token_backing", "mmap"])
+    assert rc == 0
+    # default --mmap_dir: <output_dir>/token_cache
+    cache = out_mm / "token_cache" / "corpus_tokens"
+    assert (cache / "store_meta.json").exists()
+    assert (cache / "tokens.int32.bin").exists()
+    out_ref = filespace["base"] / "out_ref"
+    rc = main(common + ["--output_dir", str(out_ref),
+                        "--staging", "sync"])
+    assert rc == 0
+    assert read_mrr(out_mm) == read_mrr(out_ref)
+
+
 def test_validator_cli_rerank_mode(filespace):
     from repro.core.cli import main
     outdir = filespace["base"] / "out_rr"

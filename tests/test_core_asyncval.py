@@ -90,6 +90,19 @@ def test_watcher_stride(tmp_path):
     assert w.poll() == [10, 20, 30]
 
 
+def test_watcher_requeue_makes_step_visible_again(tmp_path):
+    root = str(tmp_path / "ck")
+    for s in (1, 2):
+        ckpt.save(root, s, {"x": jnp.zeros(1)})
+    w = CheckpointWatcher(root)
+    assert w.poll() == [1, 2]
+    assert w.poll() == []                        # handed out -> seen
+    w.requeue(2)
+    assert w.poll() == [2]                       # visible again, 1 stays seen
+    w.requeue(99)                                # unknown step: no-op
+    assert w.poll() == []
+
+
 # ---------------------------------------------------------------------------
 # Samplers (the paper's splitter + §2 strategies)
 # ---------------------------------------------------------------------------
@@ -221,6 +234,48 @@ def test_validator_survives_broken_checkpoint(tmp_path, ds, baseline_run):
     n = v.validate_pending()
     assert n == 2                                 # 1 and 3 validated
     assert [e[0] for e in v.errors] == [2]
+
+
+def test_validator_requeues_transient_failure(tmp_path, ds, baseline_run):
+    """A checkpoint whose validation fails transiently (torn read, OOM) must
+    NOT be permanently swallowed: it is requeued and succeeds on a later
+    poll."""
+    root = str(tmp_path / "ck")
+    _save_toy_ckpt(root, 5, 5)
+    calls = {"n": 0}
+
+    def flaky_extractor(state):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient I/O failure")
+        return state["params"]
+
+    pipe = _pipeline(ds, baseline_run, sampler=RunFileTopK(depth=5))
+    v = AsyncValidator(root, pipe, params_extractor=flaky_extractor)
+    assert v.validate_pending() == 0              # first attempt fails
+    assert [e[0] for e in v.errors] == [5]
+    assert v.protect_set() == {5}                 # unvalidated -> GC-protected
+    assert v.validate_pending() == 1              # requeued step succeeds
+    assert v.ledger.validated_steps == [5]
+    assert v.protect_set() == set()
+
+
+def test_validator_gives_up_after_max_retries(tmp_path, ds, baseline_run):
+    root = str(tmp_path / "ck")
+    _save_toy_ckpt(root, 7, 7)
+
+    def broken_extractor(state):
+        raise RuntimeError("permanently broken")
+
+    pipe = _pipeline(ds, baseline_run, sampler=RunFileTopK(depth=5))
+    v = AsyncValidator(root, pipe, params_extractor=broken_extractor,
+                       max_retries=1)
+    for _ in range(4):                            # poll far past the budget
+        assert v.validate_pending() == 0
+    # 1 initial attempt + 1 retry, then the step is given up on
+    assert [e[0] for e in v.errors] == [7, 7]
+    assert v.watcher.poll() == []                 # not offered again
+    assert v.protect_set() == {7}                 # but still GC-protected
 
 
 def test_validator_async_thread_and_protect_set(tmp_path, ds, baseline_run):
