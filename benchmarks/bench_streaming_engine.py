@@ -1,6 +1,8 @@
 """Streaming vs materialized validation engine: the memory/time win —
 plus the staging-overlap case (out-of-core mmap TokenStore, double-buffered
-vs synchronous host→device staging).
+vs synchronous host→device staging) and the rerank-at-scale case
+(query-blocked vs dense materialized candidate gather; sharded vs
+single-device streaming rerank).
 
 The legacy path materializes the full (N, D) corpus embedding matrix on host
 (one ``np.asarray`` per batch) and copies it back to device for retrieval.
@@ -27,6 +29,7 @@ from __future__ import annotations
 import os
 import shutil
 import tempfile
+import time
 
 from benchmarks.common import toy_spec, train_toy_dr
 from repro.core.pipeline import ValidationConfig, ValidationPipeline
@@ -103,6 +106,109 @@ def _run_variants(ds, spec, params, mmap_dir, *, chunk, k, repeats,
     return rows, results
 
 
+def run_rerank(n_queries: int = 2048, cmax: int = 256,
+               corpus_size: int = 4096, dim: int = 16, chunk: int = 256,
+               mem_shrink: int = 16, seed: int = 0, repeats: int = 5):
+    """Rerank at scale: Q=2048 queries x Cmax=256 candidates (the ISSUE's
+    acceptance point), four paths over identical integer-valued embeddings
+    (exact float32 dot products, so every path must agree bit for bit):
+
+      * ``rerank_dense``   — materialized, one (Q, Cmax, D) gather;
+      * ``rerank_blocked`` — materialized, (Q_block, Cmax, D) per gather
+        with Q_block = Q/``mem_shrink`` — peak candidate-block memory drops
+        ``mem_shrink``-fold while wall time must stay within 10%;
+      * ``rerank_stream``  — streaming single-device StreamRerankStage;
+      * ``rerank_sharded`` — streaming ShardedStreamRerankStage on a mesh
+        over every local device (1 on the CPU CI host; the multi-device
+        behaviour is exercised by tests/test_distributed.py).
+
+    Peak candidate-block bytes are analytic (Q_block x Cmax x D x 4), like
+    the module's other footprints: the blocked loop provably never holds
+    more than one block (the structural guarantee is the loop itself;
+    parity across block sizes is enforced by tests/test_rerank_parity.py).
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import engine as E
+    from repro.core import retrieval as R
+    from repro.distributed import compat
+
+    rng = np.random.default_rng(seed)
+    vocab = 64
+    table = rng.integers(-4, 5, size=(vocab, dim)).astype(np.float32)
+    doc_texts = [[int(i % vocab)] for i in range(corpus_size)]
+    c = table[[t[0] for t in doc_texts]]
+    q = rng.integers(-4, 5, size=(n_queries, dim)).astype(np.float32)
+    qids = [f"q{i}" for i in range(n_queries)]
+    dids = [f"d{i}" for i in range(corpus_size)]
+    # cmax distinct candidates per query, vectorized draw
+    picks = rng.permuted(np.tile(np.arange(corpus_size), (n_queries, 1)),
+                         axis=1)[:, :cmax]
+    per_query = {qid: [f"d{j}" for j in row]
+                 for qid, row in zip(qids, picks)}
+
+    q_block = max(1, n_queries // mem_shrink)
+    k = 100
+
+    def dense():
+        return R.rerank_run(qids, q, dids, c, per_query, k=k,
+                            q_block=n_queries)
+
+    def blocked():
+        return R.rerank_run(qids, q, dids, c, per_query, k=k,
+                            q_block=q_block)
+
+    params = {"table": jnp.asarray(table)}
+    q_dev = jnp.asarray(q)
+
+    def enc(params, tokens, mask):
+        return jnp.take(params["table"], tokens[:, 0], axis=0)
+
+    store = E.TokenStore.build(doc_texts, max_len=2, chunk=chunk)
+    stages = {
+        "rerank_stream": E.StreamRerankStage(
+            enc, k=k, query_ids=qids, doc_ids=dids, per_query=per_query,
+            store=store),
+        "rerank_sharded": E.ShardedStreamRerankStage(
+            enc, compat.make_mesh((jax.device_count(),), ("data",)), k=k,
+            query_ids=qids, doc_ids=dids, per_query=per_query, store=store),
+    }
+
+    def stream(stage):
+        def go():
+            carry = stage.init(q_dev)
+            for toks, mask, base, n_valid in store.chunks():
+                if not stage.wants_chunk(base // store.chunk):
+                    continue
+                carry = stage.step(params, q_dev, carry, toks, mask, base,
+                                   n_valid)
+            jax.block_until_ready(carry)
+            return stage.finalize(carry)
+        return go
+
+    fns = {"rerank_dense": dense, "rerank_blocked": blocked,
+           **{name: stream(stg) for name, stg in stages.items()}}
+    outs = {name: fn() for name, fn in fns.items()}      # warm-up + parity
+    times = {name: [] for name in fns}
+    for _ in range(repeats):
+        for name, fn in fns.items():                     # interleaved
+            t0 = time.time()
+            fn()
+            times[name].append(time.time() - t0)
+
+    cand_bytes = {"rerank_dense": n_queries * cmax * dim * 4,
+                  "rerank_blocked": q_block * cmax * dim * 4,
+                  # streaming never gathers candidate embeddings at all —
+                  # its footprint is the (Q, Cmax) f32 score carry
+                  "rerank_stream": n_queries * cmax * 4,
+                  "rerank_sharded": n_queries * cmax * 4}
+    rows = [{"engine": name, "total_s": min(times[name]),
+             "peak_cand_bytes": cand_bytes[name]} for name in fns]
+    return rows, outs
+
+
 def main():
     rows, results = run()
     print("name,engine,total_s,peak_emb_bytes,peak_host_tok_bytes,mrr")
@@ -146,6 +252,37 @@ def main():
     assert stage_ratio <= slack, \
         f"double-buffered staging must be no worse than synchronous " \
         f"(ratio={stage_ratio:.3f} > slack={slack})"
+
+    # -- rerank at scale: Q=2048, Cmax=256 ---------------------------------
+    rrows, routs = run_rerank()
+    print("name,engine,total_s,peak_cand_bytes,,")
+    for r in rrows:
+        print(f"rerank_scale,{r['engine']},{r['total_s']:.3f},"
+              f"{r['peak_cand_bytes']},,")
+    rby = {r["engine"]: r for r in rrows}
+    mem_ratio = (rby["rerank_dense"]["peak_cand_bytes"]
+                 / rby["rerank_blocked"]["peak_cand_bytes"])
+    rr_time = (rby["rerank_blocked"]["total_s"]
+               / max(rby["rerank_dense"]["total_s"], 1e-9))
+    sh_time = (rby["rerank_sharded"]["total_s"]
+               / max(rby["rerank_stream"]["total_s"], 1e-9))
+    print(f"rerank_scale,cand_block_shrink_x,{mem_ratio:.1f},,,")
+    print(f"rerank_scale,time_ratio_blocked_over_dense,{rr_time:.3f},,,")
+    print(f"rerank_scale,time_ratio_sharded_over_single,{sh_time:.3f},,,")
+    # integer-valued embeddings: every rerank path must agree bit for bit
+    # (runs AND scores), not just to a metric epsilon.
+    for name, got in routs.items():
+        assert got == routs["rerank_dense"], \
+            f"rerank path {name} diverged from the dense gather"
+    assert mem_ratio >= 8, \
+        f"blocked gather must cut peak candidate-block memory >= 8x " \
+        f"(got {mem_ratio:.1f}x)"
+    # acceptance bar: blocked within 10% of the dense gather's wall time
+    # (same CI noise widening as the other wall-clock gates)
+    rr_slack = 1.10 * slack / 1.05
+    assert rr_time <= rr_slack, \
+        f"blocked rerank gather must stay within 10% of dense wall time " \
+        f"(ratio={rr_time:.3f} > {rr_slack:.3f})"
     return rows
 
 

@@ -90,6 +90,13 @@ def main(argv=None) -> int:
                     help="host->device chunk staging: overlap the copy of "
                          "chunk i+1 with chunk i's compute (default) or "
                          "copy synchronously")
+    ap.add_argument("--staging_depth", type=int, default=2,
+                    help="prefetch depth of the staging pipeline: 2 "
+                         "(default) is the classic double buffer; deeper "
+                         "values keep more device_puts in flight to hide "
+                         "the burstier latency of remote-storage (S3/GCS-"
+                         "backed mmap) TokenStores, at O(depth x chunk) "
+                         "host token memory")
     ap.add_argument("--token_backing", default="memory",
                     choices=["memory", "mmap"],
                     help="TokenStore backing: host RAM (default) or "
@@ -99,6 +106,18 @@ def main(argv=None) -> int:
                     help="cache dir for --token_backing mmap (default: "
                          "<output_dir>/token_cache); built once, reused "
                          "across checkpoints and restarts")
+    ap.add_argument("--token_fingerprint", default="fast",
+                    choices=["fast", "full"],
+                    help="mmap cache key: 'fast' (default) is O(1) in "
+                         "corpus size but misses in-place mutations of the "
+                         "corpus middle; 'full' hashes every text so any "
+                         "mutation rebuilds the cache")
+    ap.add_argument("--rerank_block", type=int, default=None,
+                    help="materialized rerank only: queries per candidate-"
+                         "embedding gather block — peak gather memory is "
+                         "O(rerank_block x Cmax x D) instead of "
+                         "O(Q x Cmax x D), bit-identical results (default: "
+                         "auto-sized from a 256 MiB budget)")
     ap.add_argument("--fp16", action="store_true",
                     help="bf16 compute (TPU-native half precision)")
     ap.add_argument("--mode", default="retrieval",
@@ -152,8 +171,11 @@ def main(argv=None) -> int:
                             engine=args.engine, chunk_size=args.chunk_size,
                             scan_window=args.scan_window,
                             staging=args.staging,
+                            staging_depth=args.staging_depth,
                             token_backing=args.token_backing,
                             mmap_dir=mmap_dir,
+                            token_fingerprint=args.token_fingerprint,
+                            rerank_block=args.rerank_block,
                             write_run=args.write_run,
                             output_dir=args.output_dir,
                             run_tag=args.run_name)

@@ -19,18 +19,23 @@ pipeline:
      XLA temporary, freed as soon as the step retires.  Peak embedding
      memory is ``O(chunk x D + Q x k)`` — the ``(N, D)`` matrix is *never*
      materialized, on host or device, so the corpus can exceed host RAM.
-  3. **Double-buffered host→device staging** (:func:`staged_batches`) — the
+  3. **Pipelined host→device staging** (:func:`staged_batches`) — the
      async ``jax.device_put`` of chunk ``i+1`` is issued while chunk ``i``'s
      fused step is still in flight, for both the single-device and
      ``shard_map`` paths (sharded chunks are placed with the row sharding
      the step's ``in_specs`` expect, so no re-layout happens at dispatch).
-     Peak host-staged token memory is ``O(depth x window x chunk x L)``.
+     The prefetch depth is configurable (``staging_depth``; 2 = the classic
+     double buffer, deeper for remote-storage token stores).  Peak
+     host-staged token memory is ``O(depth x window x chunk x L)``.
   4. A shared :class:`Stage` interface through which every validation mode
      (``retrieval``, ``rerank``, ``average_rank``) and every implementation
      (``xla``, ``pallas`` via ``repro.kernels.topk_mips``, sharded via
-     ``shard_map`` on the validator mesh) is routed.  Query encoding routes
-     through the same sharded path (``encode_store(mesh=...)``) so huge
-     query sets shard with the corpus.
+     ``shard_map`` on the validator mesh) is routed — rerank included: the
+     sharded rerank stage shards chunk rows over the mesh and folds per-
+     shard candidate scores with a slot-aligned hierarchical merge, so
+     ``make_stage(mode="rerank", mesh=...)`` scales exactly like retrieval.
+     Query encoding routes through the same sharded path
+     (``encode_store(mesh=...)``) so huge query sets shard with the corpus.
 
 ``MaterializedEngine`` preserves the legacy encode-all-then-retrieve path
 behind the same interface for A/B benchmarking
@@ -54,8 +59,10 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.encoder import cached_compiled, encode_texts, jitted_encoder
-from repro.core.retrieval import (_hierarchical_topk_merge, _merge_topk,
-                                  pad_candidates, rerank_run, retrieve_run)
+from repro.core.retrieval import (_hierarchical_slot_max,
+                                  _hierarchical_topk_merge, _merge_topk,
+                                  pad_candidates, rank_candidates, rerank_run,
+                                  retrieve_run)
 from repro.data.corpus import Tokens, pad_batch
 from repro.distributed import compat
 
@@ -81,16 +88,29 @@ _STORE_VERSION = 1
 
 
 def _store_fingerprint(texts: Sequence[Tokens], *, max_len: int,
-                       chunk: int) -> str:
-    """Cheap content fingerprint for mmap-cache reuse: geometry plus a hash
-    of the first/last 16 texts.  Deliberately O(1) in corpus size — the
-    point of the cache is to NOT re-read millions of texts per checkpoint;
-    callers that mutate the middle of a corpus in place must use a fresh
-    ``cache_dir``."""
+                       chunk: int, mode: str = "fast") -> str:
+    """Content fingerprint for mmap-cache reuse.
+
+    ``mode="fast"`` (default): geometry plus a hash of the first/last 16
+    texts.  Deliberately O(1) in corpus size — the point of the cache is to
+    NOT re-read millions of texts per checkpoint.  The documented hazard:
+    a caller that mutates the *middle* of a corpus in place (same length,
+    same edges) gets a stale cache hit; such callers must use a fresh
+    ``cache_dir`` or opt into ``mode="full"``.
+
+    ``mode="full"``: hashes every text — O(corpus) per build, but any
+    single-token mutation anywhere invalidates the cache.  The two modes
+    hash disjoint tag prefixes, so switching modes always rebuilds rather
+    than trusting the other mode's marker.
+    """
+    if mode not in ("fast", "full"):
+        raise ValueError(f"unknown fingerprint mode {mode!r} "
+                         "(expected 'fast' or 'full')")
     h = hashlib.sha1()
-    h.update(f"v{_STORE_VERSION}:{len(texts)}:{max_len}:{chunk}".encode())
-    edge = list(texts[:16]) + list(texts[-16:])
-    for t in edge:
+    h.update(f"v{_STORE_VERSION}:{mode}:{len(texts)}:{max_len}:{chunk}"
+             .encode())
+    scan = texts if mode == "full" else list(texts[:16]) + list(texts[-16:])
+    for t in scan:
         h.update(np.asarray(list(t), np.int64).tobytes())
         h.update(b"|")
     return h.hexdigest()
@@ -117,8 +137,8 @@ class TokenStore:
 
     @classmethod
     def build(cls, texts: Sequence[Tokens], *, max_len: int, chunk: int,
-              backing: str = "memory",
-              cache_dir: Optional[str] = None) -> "TokenStore":
+              backing: str = "memory", cache_dir: Optional[str] = None,
+              fingerprint: str = "fast") -> "TokenStore":
         """Pad ``texts`` into ``(n_chunks, chunk, max_len)`` token/mask arrays.
 
         ``backing="memory"`` (default) holds both arrays in host RAM.
@@ -126,7 +146,12 @@ class TokenStore:
         ``backing="mmap"`` spills them to memory-mapped files under
         ``cache_dir`` (required), built once and reused by every later
         ``build`` with the same geometry + content fingerprint — across
-        checkpoints AND across processes.  On-disk format (version 1):
+        checkpoints AND across processes.  ``fingerprint`` picks the cache
+        key: ``"fast"`` (default) is O(1) in corpus size (geometry + edge
+        texts — a *middle* mutation with unchanged edges is a documented
+        stale hit; use a fresh ``cache_dir`` or ``"full"``), ``"full"``
+        hashes every text so any in-place mutation rebuilds the cache (see
+        :func:`_store_fingerprint`).  On-disk format (version 1):
 
         * ``store_meta.json`` — ``{"version", "n_texts", "chunk", "max_len",
           "n_chunks", "fingerprint"}``; written LAST, so a torn build (crash
@@ -142,6 +167,9 @@ class TokenStore:
         afterwards the maps are reopened read-only (``mode="r"``) so the
         cache cannot be corrupted by a stray write.
         """
+        if fingerprint not in ("fast", "full"):
+            raise ValueError(f"unknown fingerprint mode {fingerprint!r} "
+                             "(expected 'fast' or 'full')")
         n = len(texts)
         chunk = max(1, chunk)
         n_chunks = -(-n // chunk) if n else 0
@@ -164,7 +192,8 @@ class TokenStore:
         meta_path = os.path.join(cache_dir, _STORE_META)
         tok_path = os.path.join(cache_dir, _STORE_TOKENS)
         mask_path = os.path.join(cache_dir, _STORE_MASK)
-        fp = _store_fingerprint(texts, max_len=max_len, chunk=chunk)
+        fp = _store_fingerprint(texts, max_len=max_len, chunk=chunk,
+                                mode=fingerprint)
         meta = {"version": _STORE_VERSION, "n_texts": n, "chunk": chunk,
                 "max_len": max_len, "n_chunks": n_chunks, "fingerprint": fp}
         n_slots = int(np.prod(shape))
@@ -229,6 +258,48 @@ class TokenStore:
         for ci in range(self.n_chunks):
             yield (jnp.asarray(self.tokens[ci]), jnp.asarray(self.mask[ci]),
                    ci * self.chunk, self.rows_valid(ci))
+
+    def candidate_map(self, cand_idx: np.ndarray) -> "CandidateMap":
+        """Precompute candidate membership against THIS store's chunking.
+
+        ``cand_idx`` is the padded ``(Q, Cmax)`` slot map of global corpus
+        rows from :func:`repro.core.retrieval.pad_candidates` (-1 = pad).
+        The result is what lets rerank stages touch only the corpus that
+        matters: a per-chunk ``(chunk,)`` row-membership mask (is this row
+        any query's candidate?) plus per-chunk counts the engine uses to
+        skip — never stage, never encode — chunks with zero candidate rows.
+        Built once per validator lifetime, like the store itself.
+        """
+        rows = np.unique(cand_idx[cand_idx >= 0])
+        rows = rows[rows < self.n_texts]
+        row_mask = np.zeros((self.n_chunks, self.chunk), bool)
+        if rows.size and self.n_chunks:
+            row_mask[rows // self.chunk, rows % self.chunk] = True
+        return CandidateMap(slot_map=np.asarray(cand_idx, np.int32),
+                            row_mask=row_mask,
+                            chunk_counts=row_mask.sum(axis=1),
+                            chunk=self.chunk)
+
+
+@dataclasses.dataclass
+class CandidateMap:
+    """Per-chunk candidate membership for the rerank stages (built on the
+    TokenStore side, where the chunk geometry lives).
+
+    ``slot_map`` is the replicated ``(Q, Cmax)`` candidate slot map (global
+    corpus rows, -1 = pad); ``row_mask[ci]`` is the ``(chunk,)`` mask of
+    rows in chunk ``ci`` that appear in ANY query's candidate set; and
+    ``chunk_counts[ci]`` is its popcount — zero means the chunk holds no
+    candidates and the engine skips it entirely (no staging, no encode).
+    """
+
+    slot_map: np.ndarray        # (Q, Cmax) int32 global rows, -1 = pad
+    row_mask: np.ndarray        # (n_chunks, chunk) bool candidate membership
+    chunk_counts: np.ndarray    # (n_chunks,) int per-chunk candidate rows
+    chunk: int
+
+    def has_candidates(self, ci: int) -> bool:
+        return bool(self.chunk_counts[ci])
 
 
 # Sharded-encoder cache keyed on (encode_fn, mesh, axis_names) — one compiled
@@ -524,21 +595,42 @@ class ShardedStreamTopKStage(StreamTopKStage):
 class StreamRerankStage(Stage):
     """Rerank / average-rank modes: the carry is the padded per-query
     candidate score matrix (Q, Cmax); each chunk's scores are gathered into
-    it where the candidates' global rows fall inside the chunk."""
+    it where the candidates' global rows fall inside the chunk.
+
+    With a ``store`` the stage precomputes a :class:`CandidateMap` — the
+    per-chunk ``(chunk,)`` candidate-row masks plus the replicated
+    ``(Q, Cmax)`` slot map — so (a) the engine skips chunks with zero
+    candidate rows (``wants_chunk``) and (b) the fused step only ever scores
+    rows that appear in some query's candidate set (non-members are masked
+    to ``-inf`` before the slot gather; members are untouched, so the carry
+    is bit-for-bit what the unmasked step produced).  Finalization routes
+    through the shared :func:`repro.core.retrieval.rank_candidates`, the
+    same stable-tie-break selection the materialized ``rerank_run`` uses —
+    that sharing is what makes cross-mode runs identical, not just close.
+    """
 
     name = "rerank"
 
     def __init__(self, encode_fn: Callable, *, k: int, query_ids: List[str],
-                 doc_ids: List[str], per_query: Dict[str, List[str]]):
+                 doc_ids: List[str], per_query: Dict[str, List[str]],
+                 store: Optional[TokenStore] = None):
         self.query_ids = query_ids
         self.k = k
         cand_idx, self.cands = pad_candidates(query_ids, doc_ids, per_query)
         self.cand_idx = jnp.asarray(cand_idx)
+        self.cmap = store.candidate_map(cand_idx) \
+            if store is not None and store.n_chunks else None
+        self._row_masks: Dict[int, jnp.ndarray] = {}
 
-        def fused(params, q_emb, cand_s, cand_idx, toks, mask, base, n_valid):
+        def fused(params, q_emb, cand_s, cand_idx, toks, mask, row_mask,
+                  base, n_valid):
             emb = encode_fn(params, toks, mask)               # (chunk, D)
             s = (q_emb @ emb.T).astype(jnp.float32)           # (Q, chunk)
             chunk = toks.shape[0]
+            # score only candidate-member rows (membership precomputed per
+            # chunk on the TokenStore side); hit slots always reference
+            # member rows, so the gather below sees unmasked scores.
+            s = jnp.where(row_mask[None, :], s, -jnp.inf)
             local = cand_idx - base
             hit = (cand_idx >= 0) & (local >= 0) & (local < n_valid)
             g = jnp.take_along_axis(s, jnp.clip(local, 0, chunk - 1), axis=1)
@@ -546,36 +638,131 @@ class StreamRerankStage(Stage):
 
         self._fused = jax.jit(fused, donate_argnums=_donate(2,))
 
+    def wants_chunk(self, ci: int) -> bool:
+        """False for chunks holding no candidate rows — the engine neither
+        stages nor encodes them (a skipped chunk cannot write any slot, so
+        skipping preserves bit-for-bit parity)."""
+        return self.cmap is None or self.cmap.has_candidates(ci)
+
+    def _row_mask(self, ci: int, chunk: int) -> jnp.ndarray:
+        """Device-cached (chunk,) membership mask for chunk ``ci`` (all-True
+        when the stage was built without a store)."""
+        key = ci if self.cmap is not None else -1
+        m = self._row_masks.get(key)
+        if m is None:
+            host = self.cmap.row_mask[ci] if self.cmap is not None \
+                else np.ones((chunk,), bool)
+            m = self._place_mask(host)
+            self._row_masks[key] = m
+        return m
+
+    def _place_mask(self, host: np.ndarray) -> jnp.ndarray:
+        return jnp.asarray(host)
+
     def init(self, q_emb):
         Q = q_emb.shape[0]
         return jnp.full((Q, self.cand_idx.shape[1]), -jnp.inf, jnp.float32)
 
     def step(self, params, q_emb, carry, toks, mask, base, n_valid):
+        ci = base // (self.cmap.chunk if self.cmap is not None
+                      else max(toks.shape[0], 1))
         return self._fused(params, q_emb, carry, self.cand_idx, toks, mask,
+                           self._row_mask(ci, toks.shape[0]),
                            jnp.asarray(base, jnp.int32),
                            jnp.asarray(n_valid, jnp.int32))
 
     def finalize(self, carry):
-        s = np.asarray(carry)
-        order = np.argsort(-s, axis=1)
-        run, scores = {}, {}
-        for qi, qid in enumerate(self.query_ids):
-            keep = order[qi, :min(self.k, len(self.cands[qi]))]
-            run[qid] = [self.cands[qi][j] for j in keep]
-            scores[qid] = [float(s[qi, j]) for j in keep]
-        return run, scores
+        return rank_candidates(self.query_ids, np.asarray(carry), self.cands,
+                               k=self.k)
+
+
+class ShardedStreamRerankStage(StreamRerankStage):
+    """Rerank / average-rank modes on the validator mesh — rerank as a
+    first-class mesh citizen, mirroring :class:`ShardedStreamTopKStage`.
+
+    Each chunk's rows are sharded over ``axis_names`` (the engine stages
+    them pre-sharded via ``input_sharding``, like the retrieval stage);
+    every shard encodes its rows under the one compiled ``shard_map`` step,
+    scores only its candidate-member rows, and gathers them into its local
+    view of the replicated ``(Q, Cmax)`` slot carry.  Because every slot
+    names one global corpus row — which lives on exactly one shard of one
+    chunk — the cross-shard fold is the slot-aligned degenerate case of the
+    retrieval stage's hierarchical all-gather merge: an elementwise max per
+    mesh axis, innermost first (:func:`~repro.core.retrieval.
+    _hierarchical_slot_max`), which re-replicates the carry.  The slot map
+    and query matrix stay replicated; collective volume per chunk is
+    O(axes x Q x Cmax), independent of corpus size.  Carry, finalize, and
+    chunk-skipping are inherited — so sharded runs are bit-for-bit the
+    single-device runs (tests/test_rerank_parity.py).
+    """
+
+    name = "rerank_sharded"
+
+    def __init__(self, encode_fn: Callable, mesh, *, k: int,
+                 query_ids: List[str], doc_ids: List[str],
+                 per_query: Dict[str, List[str]],
+                 store: Optional[TokenStore] = None, axis_names=None):
+        super().__init__(encode_fn, k=k, query_ids=query_ids,
+                         doc_ids=doc_ids, per_query=per_query, store=store)
+        axis_names = tuple(axis_names or mesh.axis_names)
+        ax = axis_names[0] if len(axis_names) == 1 else axis_names
+
+        def local(params, q_emb, cand_s, cand_idx, toks, mask, row_mask,
+                  base, n_valid):
+            emb = encode_fn(params, toks, mask)           # (rows, D) local
+            rows = toks.shape[0]
+            shard = jax.lax.axis_index(ax)
+            s = (q_emb @ emb.T).astype(jnp.float32)       # (Q, rows) local
+            col = shard * rows + jnp.arange(rows, dtype=jnp.int32)
+            s = jnp.where((row_mask & (col < n_valid))[None, :], s, -jnp.inf)
+            pos = cand_idx - base - shard * rows          # shard-local slot
+            hit = (cand_idx >= 0) & (cand_idx - base < n_valid) \
+                & (pos >= 0) & (pos < rows)
+            g = jnp.take_along_axis(s, jnp.clip(pos, 0, rows - 1), axis=1)
+            part = jnp.where(hit, g, cand_s)
+            # slot-aligned hierarchical merge: each slot's row lives on one
+            # shard, so max(part over shards) == the written score where a
+            # shard hit and the (replicated) carry everywhere else.
+            return _hierarchical_slot_max(part, axis_names)
+
+        spec_rows = P(ax)
+        # check=False: the carry enters replicated, is device-varying after
+        # the per-shard slot writes, and is re-replicated by the final merge
+        # — the same legal pattern ShardedStreamTopKStage documents.
+        self._fused = jax.jit(compat.shard_map(
+            local, mesh=mesh,
+            in_specs=(P(), P(), P(), P(), spec_rows, spec_rows, spec_rows,
+                      P(), P()),
+            out_specs=P(), check=False), donate_argnums=_donate(2,))
+        from repro.distributed.sharding import replicated_sharding, \
+            rows_sharding
+        # staged token chunks (and the per-chunk row masks) land pre-sharded;
+        # the slot map is placed replicated once so dispatch does no
+        # re-layout on any step.
+        self.input_sharding = rows_sharding(mesh, axis_names)
+        self.cand_idx = jax.device_put(self.cand_idx,
+                                       replicated_sharding(mesh))
+
+    def _place_mask(self, host: np.ndarray) -> jnp.ndarray:
+        return jax.device_put(host, self.input_sharding)
 
 
 def make_stage(encode_fn: Callable, *, mode: str, impl: str, k: int,
                query_ids: List[str], doc_ids: List[str],
                per_query: Optional[Dict[str, List[str]]] = None,
-               mesh=None, scan_window: int = 8) -> Stage:
+               mesh=None, scan_window: int = 8,
+               store: Optional[TokenStore] = None) -> Stage:
     """Route (mode, impl, mesh) to a Stage — the single dispatch point every
-    validation path goes through."""
+    validation path goes through.  ``(mode="rerank", mesh=...)`` just works:
+    rerank shards over the validator mesh exactly like retrieval does.
+    ``store`` (the corpus TokenStore) lets the rerank stages precompute
+    per-chunk candidate membership for chunk skipping."""
     if mode in ("rerank", "average_rank") and per_query:
-        return StreamRerankStage(encode_fn, k=max(k, 1000),
-                                 query_ids=query_ids, doc_ids=doc_ids,
-                                 per_query=per_query)
+        kw = dict(k=max(k, 1000), query_ids=query_ids, doc_ids=doc_ids,
+                  per_query=per_query, store=store)
+        if mesh is not None:
+            return ShardedStreamRerankStage(encode_fn, mesh, **kw)
+        return StreamRerankStage(encode_fn, **kw)
     if impl == "pallas":
         return PallasStreamTopKStage(encode_fn, k=k, query_ids=query_ids,
                                      doc_ids=doc_ids)
@@ -594,21 +781,36 @@ def make_stage(encode_fn: Callable, *, mode: str, impl: str, k: int,
 class StreamingEngine:
     """Drive a Stage over a TokenStore: the full validation data path with
     peak embedding memory O(chunk x D + Q x k) — and, with an mmap-backed
-    store, peak host token memory O(staging_depth x window x chunk x L)."""
+    store, peak host token memory O(staging_depth x window x chunk x L).
+
+    ``staging_depth`` is the prefetch depth of :func:`staged_batches`:
+    2 (default) is the classic double buffer; deeper pipelines (3, 4, ...)
+    keep that many batches' ``device_put`` in flight, which hides the
+    longer/burstier latencies of remote-storage TokenStores (S3/GCS-backed
+    mmap) at a host-memory cost of O(depth x window x chunk x L).  Stages
+    exposing ``wants_chunk`` (the rerank stages, via their candidate maps)
+    prune the schedule BEFORE staging, so skipped chunks are never read off
+    the store backing at all.
+    """
 
     name = "streaming"
 
     def __init__(self, spec, doc_store: TokenStore, query_store: TokenStore,
                  stage: Stage, *, staging: str = "double_buffered",
-                 query_mesh=None, query_axis_names=None):
+                 staging_depth: int = 2, query_mesh=None,
+                 query_axis_names=None):
         if staging not in ("double_buffered", "sync"):
             raise ValueError(f"unknown staging {staging!r} "
                              "(expected 'double_buffered' or 'sync')")
+        if staging_depth < 1:
+            raise ValueError(f"staging_depth must be >= 1, got "
+                             f"{staging_depth!r}")
         self.spec = spec
         self.doc_store = doc_store
         self.query_store = query_store
         self.stage = stage
         self.staging = staging
+        self.staging_depth = staging_depth
         self.query_mesh = query_mesh
         self.query_axis_names = query_axis_names
 
@@ -626,12 +828,21 @@ class StreamingEngine:
         window = getattr(self.stage, "window", 1)
         use_window = window > 1 and hasattr(self.stage, "step_window")
         schedule = plan_schedule(store.n_chunks, window if use_window else 1)
-        # double buffer: batch i+1's device_put is already in flight when
-        # batch i's fused step dispatches (sync staging: depth=1 — copy,
-        # then compute; kept for A/B benchmarking).
+        # candidate-aware pruning: a rerank stage knows (from its
+        # CandidateMap) which chunks hold candidate rows; the rest are
+        # dropped from the schedule before staging ever reads them.
+        wants = getattr(self.stage, "wants_chunk", None)
+        if wants is not None:
+            schedule = [(ci, w) for ci, w in schedule
+                        if w > 1 or wants(ci)]
+        # prefetch pipeline: batch i+depth-1's device_put is already in
+        # flight when batch i's fused step dispatches (depth=2 is the double
+        # buffer; sync staging forces depth=1 — copy, then compute — kept
+        # for A/B benchmarking).
         batches = staged_batches(
-            store, schedule, depth=2 if self.staging == "double_buffered"
-            else 1, sharding=getattr(self.stage, "input_sharding", None))
+            store, schedule,
+            depth=1 if self.staging == "sync" else self.staging_depth,
+            sharding=getattr(self.stage, "input_sharding", None))
         for (ci, w), (toks, mask) in zip(schedule, batches):
             if w > 1:
                 bases = store.chunk * np.arange(ci, ci + w, dtype=np.int32)
@@ -669,7 +880,8 @@ class MaterializedEngine:
     def __init__(self, spec, doc_texts: List[Tokens], query_texts: List[Tokens],
                  *, mode: str, k: int, impl: str, batch_size: int,
                  query_ids: List[str], doc_ids: List[str],
-                 per_query: Optional[Dict[str, List[str]]] = None, mesh=None):
+                 per_query: Optional[Dict[str, List[str]]] = None, mesh=None,
+                 rerank_block: Optional[int] = None):
         self.spec = spec
         self.doc_texts = doc_texts
         self.query_texts = query_texts
@@ -681,6 +893,9 @@ class MaterializedEngine:
         self.doc_ids = doc_ids
         self.per_query = per_query
         self.mesh = mesh
+        # queries per rerank candidate-gather block (None = auto from the
+        # rerank_run memory budget); see rerank_run's docstring.
+        self.rerank_block = rerank_block
 
     def run(self, params) -> Tuple[Run, Scores, Dict[str, float]]:
         t0 = time.time()
@@ -698,7 +913,8 @@ class MaterializedEngine:
         if self.mode in ("rerank", "average_rank") and self.per_query:
             run, scores = rerank_run(self.query_ids, q_emb, self.doc_ids,
                                      c_emb, self.per_query,
-                                     k=max(self.k, 1000))
+                                     k=max(self.k, 1000),
+                                     q_block=self.rerank_block)
         else:
             run, scores = retrieve_run(self.query_ids, q_emb, self.doc_ids,
                                        c_emb, k=self.k, impl=self.impl,
@@ -716,31 +932,39 @@ def make_engine(spec, corpus_texts: List[Tokens], query_texts: List[Tokens],
                 doc_ids: List[str],
                 per_query: Optional[Dict[str, List[str]]] = None, mesh=None,
                 scan_window: int = 8, staging: str = "double_buffered",
-                token_backing: str = "memory",
-                mmap_dir: Optional[str] = None):
+                staging_depth: int = 2, token_backing: str = "memory",
+                mmap_dir: Optional[str] = None,
+                token_fingerprint: str = "fast",
+                rerank_block: Optional[int] = None):
     """Build the requested engine.  ``chunk_size`` defaults to ``batch_size``
     (legacy-equivalent encode granularity); with a mesh it is rounded up to a
-    multiple of the shard count so every shard sees equal fixed-shape rows.
+    multiple of the shard count so every shard sees equal fixed-shape rows —
+    for EVERY mode: retrieval, rerank, and average_rank all shard over the
+    validator mesh through the same ``make_stage`` dispatch.
 
     ``token_backing="mmap"`` spills the corpus TokenStore to memory-mapped
-    files under ``mmap_dir`` (see :meth:`TokenStore.build`); ``staging``
-    picks double-buffered (default) vs synchronous host→device staging."""
+    files under ``mmap_dir`` (see :meth:`TokenStore.build`;
+    ``token_fingerprint`` picks the fast-vs-full cache key); ``staging``
+    picks double-buffered (default) vs synchronous host→device staging and
+    ``staging_depth`` its prefetch depth (>= 1; 1 equals synchronous
+    staging, 2 is the double buffer, deeper pipelines for remote-storage
+    stores).  ``rerank_block`` caps the materialized rerank
+    path's candidate-gather block height (None = auto from the memory
+    budget) — the streaming path needs no such cap."""
     if engine == "materialized":
         return MaterializedEngine(spec, corpus_texts, query_texts, mode=mode,
                                   k=k, impl=impl, batch_size=batch_size,
                                   query_ids=query_ids, doc_ids=doc_ids,
-                                  per_query=per_query, mesh=mesh)
+                                  per_query=per_query, mesh=mesh,
+                                  rerank_block=rerank_block)
     if engine != "streaming":
         raise ValueError(f"unknown engine {engine!r} "
                          "(expected 'streaming' or 'materialized')")
     chunk = chunk_size or batch_size
     chunk = max(1, min(chunk, max(len(corpus_texts), 1)))
     q_chunk = max(1, batch_size)
-    use_mesh = mesh if mode not in ("rerank", "average_rank") or not per_query \
-        else None
-    if use_mesh is not None:
-        n_shards = int(np.prod([use_mesh.shape[a]
-                                for a in use_mesh.axis_names]))
+    if mesh is not None:
+        n_shards = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
         chunk = -(-chunk // n_shards) * n_shards
         # query chunks shard over the same mesh: equal fixed-shape rows too
         q_chunk = -(-q_chunk // n_shards) * n_shards
@@ -750,12 +974,14 @@ def make_engine(spec, corpus_texts: List[Tokens], query_texts: List[Tokens],
         corpus_texts, max_len=spec.p_max_len, chunk=chunk,
         backing=token_backing,
         cache_dir=os.path.join(mmap_dir, "corpus_tokens") if mmap_dir
-        else None)
+        else None,
+        fingerprint=token_fingerprint)
     query_store = TokenStore.build(query_texts, max_len=spec.q_max_len,
                                    chunk=q_chunk)
     stage = make_stage(spec.encode_passage, mode=mode, impl=impl, k=k,
                        query_ids=query_ids, doc_ids=doc_ids,
-                       per_query=per_query, mesh=use_mesh,
-                       scan_window=scan_window)
+                       per_query=per_query, mesh=mesh,
+                       scan_window=scan_window, store=doc_store)
     return StreamingEngine(spec, doc_store, query_store, stage,
-                           staging=staging, query_mesh=use_mesh)
+                           staging=staging, staging_depth=staging_depth,
+                           query_mesh=mesh)

@@ -17,9 +17,14 @@ encode→top-k streaming loop that never materializes the ``(N, D)`` corpus
 embedding matrix (``ValidationConfig.engine = "streaming"``); set
 ``engine="materialized"`` for the legacy encode-all-then-retrieve path.
 ``token_backing="mmap"`` (+ ``mmap_dir``) spills the pre-padded corpus
-tokens to memory-mapped files so even the tokens can exceed host RAM, and
+tokens to memory-mapped files so even the tokens can exceed host RAM
+(``token_fingerprint="full"`` opts the cache key into a full content hash),
 ``staging`` selects double-buffered (default) vs synchronous host→device
-chunk staging — both bit-for-bit identical to the in-memory sync path.
+chunk staging with a configurable prefetch depth (``staging_depth``) — all
+bit-for-bit identical to the in-memory sync path.  Every mode shards over
+``mesh``, rerank included (the sharded streaming rerank stage), and the
+materialized rerank path gathers candidates in query blocks
+(``rerank_block``) so its peak memory no longer scales with Q.
 """
 
 from __future__ import annotations
@@ -45,8 +50,13 @@ class ValidationConfig:
     chunk_size: Optional[int] = None  # streaming chunk rows; None -> batch_size
     scan_window: int = 8             # chunks folded per dispatch (xla stage)
     staging: str = "double_buffered"  # double_buffered | sync host->device
+    staging_depth: int = 2           # prefetch depth (2 = double buffer;
+                                     # deeper for remote-storage stores)
     token_backing: str = "memory"    # memory | mmap (out-of-core TokenStore)
     mmap_dir: Optional[str] = None   # cache dir for token_backing="mmap"
+    token_fingerprint: str = "fast"  # fast (O(1)) | full (content hash)
+    rerank_block: Optional[int] = None  # queries per materialized rerank
+                                     # candidate gather (None = auto budget)
     write_run: bool = False
     output_dir: Optional[str] = None
     run_tag: str = "asyncval"
@@ -58,6 +68,10 @@ class ValidationResult:
     metrics: Dict[str, float]
     timings: Dict[str, float]
     subset_size: int
+    # which data path produced the numbers ("streaming"/"materialized"/...);
+    # recorded in the validator ledger so cross-mode parity can be audited
+    # after the fact.
+    engine: str = ""
 
 
 class ValidationPipeline:
@@ -84,7 +98,10 @@ class ValidationPipeline:
             query_ids=self.query_ids, doc_ids=self.doc_ids,
             per_query=self.subset.per_query, mesh=vcfg.mesh,
             scan_window=vcfg.scan_window, staging=vcfg.staging,
-            token_backing=vcfg.token_backing, mmap_dir=vcfg.mmap_dir)
+            staging_depth=vcfg.staging_depth,
+            token_backing=vcfg.token_backing, mmap_dir=vcfg.mmap_dir,
+            token_fingerprint=vcfg.token_fingerprint,
+            rerank_block=vcfg.rerank_block)
 
     # -- one checkpoint ----------------------------------------------------
     def validate_params(self, params, step: int = 0, *,
@@ -93,7 +110,8 @@ class ValidationPipeline:
         engine for this call only (the AsyncValidator injection path) —
         the pipeline itself is never mutated."""
         v = self.vcfg
-        run, scores, timings = (engine or self.engine).run(params)
+        eng = engine or self.engine
+        run, scores, timings = eng.run(params)
 
         names = list(v.metrics)
         if v.mode == "average_rank" and "AverageRank" not in names:
@@ -108,7 +126,8 @@ class ValidationPipeline:
                 tag=v.run_tag)
 
         return ValidationResult(step=step, metrics=m, timings=timings,
-                                subset_size=len(self.doc_ids))
+                                subset_size=len(self.doc_ids),
+                                engine=getattr(eng, "name", ""))
 
 
 def params_from_checkpoint(state: Any) -> Any:

@@ -91,6 +91,21 @@ def _hierarchical_topk_merge(s, i, axis_names, k: int):
     return s, i
 
 
+def _hierarchical_slot_max(x, axis_names):
+    """Slot-aligned sibling of :func:`_hierarchical_topk_merge` for the
+    sharded rerank stage: per-shard partial candidate-score matrices are
+    already aligned on the (Q, Cmax) slot grid (each slot names one global
+    corpus row, which lives on exactly one shard), so the cross-shard merge
+    degenerates from a gather+top-k to an elementwise max — reduced one mesh
+    axis at a time, innermost first, like the top-k merge, but each level is
+    a ``pmax`` (the reduction happens on the wire, so the per-level volume is
+    Q x Cmax instead of the gather's n_ax x Q x Cmax).  Must run inside
+    shard_map."""
+    for merge_ax in reversed(tuple(axis_names)):
+        x = jax.lax.pmax(x, merge_ax)
+    return x
+
+
 def topk_sharded(mesh, q_emb, c_emb, *, k: int, axis_names=("data", "model"),
                  block: int = 4096):
     """Distributed exact top-k: corpus rows sharded over ``axis_names``.
@@ -157,13 +172,54 @@ def pad_candidates(query_ids, doc_ids, per_query: dict):
     return idx, cands
 
 
-def rerank_run(query_ids, q_emb, doc_ids, c_emb, per_query: dict, *, k: int):
+def rank_candidates(query_ids, s, cands, *, k: int):
+    """Candidate-score matrix -> ({qid: [docid...]}, {qid: [score...]}).
+
+    The ONE selection routine every rerank path (dense/blocked materialized,
+    streaming single-device, streaming sharded) finalizes through: a
+    *stable* descending sort of the (Q, Cmax) score matrix, keeping the top
+    ``min(k, len(cands[q]))`` slots per query.  Stability is what makes the
+    cross-mode parity guarantee bit-for-bit: duplicate doc ids (and any
+    other exact score ties) resolve to the lower candidate slot regardless
+    of which path produced the matrix, so identical score matrices imply
+    identical runs — not just identical up to tie order.  Padding slots are
+    ``-inf`` and sort last; they are additionally fenced off by the
+    per-query candidate count, so a ``k`` larger than the candidate list
+    never surfaces a pad.
+    """
+    s = np.asarray(s)
+    order = np.argsort(-s, axis=1, kind="stable")
+    run, run_scores = {}, {}
+    for qi, qid in enumerate(query_ids):
+        keep = order[qi, :min(k, len(cands[qi]))]
+        run[qid] = [cands[qi][j] for j in keep]
+        run_scores[qid] = [float(s[qi, j]) for j in keep]
+    return run, run_scores
+
+
+# default per-block candidate-gather budget for the materialized rerank path
+RERANK_BLOCK_BYTES = 256 << 20
+
+
+def rerank_run(query_ids, q_emb, doc_ids, c_emb, per_query: dict, *, k: int,
+               q_block: int = None, block_bytes: int = RERANK_BLOCK_BYTES):
     """RocketQA-style re-rank validation: score only each query's candidate
     list (no global top-k).
 
-    Vectorized: one padded (Q, Cmax, D) gather + a single batched matmul
-    replaces the per-query python loop (the old path re-indexed the corpus
-    matrix once per query).
+    Memory model — query-blocked materialized gather: the candidate
+    embeddings are gathered one *query block* at a time, ``(Q_block, Cmax,
+    D)`` per gather followed by one batched matmul, so peak candidate-block
+    memory is ``O(Q_block x Cmax x D)`` instead of the dense gather's
+    ``O(Q x Cmax x D)`` (~21 GB at MS MARCO rerank scale: Q=7k, Cmax=1000,
+    D=768).  ``q_block`` pins the block height explicitly; when ``None``
+    (default) it is auto-sized so one block's gather fits ``block_bytes``
+    (256 MiB default), clamped to [1, Q].  Per-element math is unchanged —
+    each (q, c) dot product reduces over D exactly as in the dense gather —
+    so runs and scores are bit-for-bit identical for every block size,
+    including the Q_block=1 and Q_block>=Q extremes (enforced by
+    tests/test_rerank_parity.py).  Selection is the shared
+    :func:`rank_candidates` (stable tie-break), the same routine the
+    streaming rerank stages finalize through.
     """
     q = np.asarray(q_emb)
     c = np.asarray(c_emb)
@@ -171,13 +227,16 @@ def rerank_run(query_ids, q_emb, doc_ids, c_emb, per_query: dict, *, k: int):
     valid = cand_idx >= 0
     if not valid.any():
         return {qid: [] for qid in query_ids}, {qid: [] for qid in query_ids}
-    sub = c[np.clip(cand_idx, 0, max(len(doc_ids) - 1, 0))]   # (Q, Cmax, D)
-    s = np.einsum("qcd,qd->qc", sub, q)                       # (Q, Cmax)
-    s = np.where(valid, s, -np.inf)
-    order = np.argsort(-s, axis=1)
-    run, run_scores = {}, {}
-    for qi, qid in enumerate(query_ids):
-        keep = order[qi, :min(k, len(cands[qi]))]
-        run[qid] = [cands[qi][j] for j in keep]
-        run_scores[qid] = [float(s[qi, j]) for j in keep]
-    return run, run_scores
+    Q, c_max = cand_idx.shape
+    if q_block is None:
+        row_bytes = c_max * c.shape[-1] * c.dtype.itemsize
+        q_block = int(max(1, block_bytes // max(row_bytes, 1)))
+    q_block = max(1, min(int(q_block), Q))
+    s = np.full((Q, c_max), -np.inf, np.float32)
+    clipped = np.clip(cand_idx, 0, max(len(doc_ids) - 1, 0))
+    for b0 in range(0, Q, q_block):
+        b1 = min(b0 + q_block, Q)
+        sub = c[clipped[b0:b1]]                       # (Q_block, Cmax, D)
+        sb = np.einsum("qcd,qd->qc", sub, q[b0:b1])   # (Q_block, Cmax)
+        s[b0:b1] = np.where(valid[b0:b1], sb, -np.inf)
+    return rank_candidates(query_ids, s, cands, k=k)

@@ -47,7 +47,11 @@ class ValidationLedger:
 
     def record(self, result: ValidationResult) -> None:
         rec = {"step": result.step, "metrics": result.metrics,
-               "timings": result.timings, "subset_size": result.subset_size}
+               "timings": result.timings, "subset_size": result.subset_size,
+               # which data path scored this step — lets a cross-mode parity
+               # audit (streaming vs materialized vs sharded) attribute every
+               # ledger row long after the run.
+               "engine": getattr(result, "engine", "")}
         self._done[result.step] = rec
         if self.path:
             with open(self.path, "a") as f:

@@ -212,6 +212,16 @@ def rows_sharding(mesh: Mesh,
     return NamedSharding(mesh, P(ax))
 
 
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """Fully-replicated NamedSharding on ``mesh``.  Used by the sharded
+    rerank stage to pin mesh-invariant operands — the ``(Q, Cmax)``
+    candidate slot map and the query matrix — onto every device ONCE at
+    stage build, so the per-chunk ``shard_map`` step's replicated
+    ``in_specs`` find them resident instead of re-broadcasting each
+    dispatch."""
+    return NamedSharding(mesh, P())
+
+
 def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
     """Mesh axes used for data parallelism ("pod" joins "data" if present)."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -180,3 +180,101 @@ def test_elastic_workers_join_mid_run():
             break
         q.complete("w2", c.chunk_id, sum(c.payload))
     assert q.finished
+
+
+# ---------------------------------------------------------------------------
+# Sharded streaming rerank on a real multi-device mesh (forced host devices,
+# subprocess — mirrors the sharded retrieval test in tests/test_engine.py)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_sharded_rerank_multidevice_subprocess():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import engine as E
+        from repro.core import retrieval as R
+        from repro.distributed import compat
+
+        mesh = compat.make_mesh((4, 2), ("data", "model"))
+        rng = np.random.default_rng(0)
+        N, Q, D, chunk, k = 96, 6, 16, 24, 50     # chunk % 8 shards == 0
+        # integer-valued table/queries: exact float32 dot products, so the
+        # 8-shard run must equal the references bit for bit, not approx.
+        params = {"table": jnp.asarray(rng.integers(-4, 5, size=(64, D)),
+                                       jnp.float32)}
+        doc_texts = [[int(i % 64)] for i in range(N)]
+        c_emb = jnp.take(params["table"],
+                         jnp.asarray([t[0] for t in doc_texts]), axis=0)
+        q_emb = jnp.asarray(rng.integers(-4, 5, size=(Q, D)), jnp.float32)
+
+        def enc(params, tokens, mask):
+            return jnp.take(params["table"], tokens[:, 0], axis=0)
+
+        qids = [f"q{i}" for i in range(Q)]
+        dids = [f"d{i}" for i in range(N)]
+        per_query = {
+            qids[0]: ["d3", "d3", "d40", "d95"],           # duplicates
+            qids[1]: [],                                   # empty
+            qids[2]: [f"d{j}" for j in range(30)],         # ragged, 2 chunks
+            qids[3]: ["d95"],                              # final chunk only
+            qids[4]: ["d0", "d24", "d48", "d72"],          # one per chunk
+            qids[5]: ["d7", "d7", "d9", "bogus"],          # dup + unknown
+        }
+        ref = R.rerank_run(qids, q_emb, dids, c_emb, per_query, k=k)
+
+        store = E.TokenStore.build(doc_texts, max_len=2, chunk=chunk)
+        stage = E.ShardedStreamRerankStage(enc, mesh, k=k, query_ids=qids,
+                                           doc_ids=dids, per_query=per_query,
+                                           store=store)
+        carry = stage.init(q_emb)
+        skipped = 0
+        for toks, mask, base, n_valid in store.chunks():
+            if not stage.wants_chunk(base // store.chunk):
+                skipped += 1
+                continue
+            carry = stage.step(params, q_emb, carry, toks, mask, base,
+                               n_valid)
+        assert stage.finalize(carry) == ref, "sharded != materialized"
+
+        # end to end: make_stage routes (mode=rerank, mesh=...) to the
+        # sharded stage and the full engine (pre-sharded staging included)
+        # scores identically to the single-device pipeline.
+        from repro.core.pipeline import ValidationConfig, ValidationPipeline
+        from repro.core.samplers import RerankTopK
+        from repro.data import corpus as corpus_lib
+        from repro.models.biencoder import EncoderSpec
+        ds = corpus_lib.synthetic_retrieval_dataset(0, n_passages=200,
+                                                    n_queries=20)
+        def enc2(params, tokens, mask):
+            emb = jnp.take(params["t"], tokens, axis=0)
+            m = mask.astype(emb.dtype)[..., None]
+            v = (emb * m).sum(1) / jnp.clip(m.sum(1), 1e-6)
+            return v / jnp.clip(jnp.linalg.norm(v, axis=-1, keepdims=True),
+                                1e-6)
+        spec = EncoderSpec(
+            name="toy", dim=16, encode_query=enc2, encode_passage=enc2,
+            init=lambda rng: {"t": 0.1 * jax.random.normal(rng, (503, 16))},
+            q_max_len=8, p_max_len=20)
+        params2 = spec.init(jax.random.PRNGKey(0))
+        base_run = corpus_lib.lexical_baseline_run(ds, k=30)
+        kw = dict(metrics=("MRR@10",), mode="rerank", k=100, batch_size=40)
+        on_mesh = ValidationPipeline(
+            spec, ds.corpus, ds.queries, ds.qrels,
+            ValidationConfig(mesh=mesh, chunk_size=40, **kw),
+            sampler=RerankTopK(depth=10), baseline_run=base_run)
+        assert on_mesh.engine.stage.name == "rerank_sharded"
+        single = ValidationPipeline(
+            spec, ds.corpus, ds.queries, ds.qrels,
+            ValidationConfig(chunk_size=40, **kw),
+            sampler=RerankTopK(depth=10), baseline_run=base_run)
+        rm = on_mesh.validate_params(params2)
+        rs = single.validate_params(params2)
+        assert rm.metrics == rs.metrics, (rm.metrics, rs.metrics)
+        print("SHARDED_RERANK_OK skipped=%d" % skipped)
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=300)
+    assert "SHARDED_RERANK_OK" in out.stdout, out.stdout + out.stderr

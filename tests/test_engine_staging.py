@@ -111,6 +111,44 @@ def test_token_store_mmap_survives_torn_meta(tmp_path):
     np.testing.assert_array_equal(np.asarray(store.tokens), mem.tokens)
 
 
+def test_token_store_full_fingerprint_catches_middle_mutation(tmp_path):
+    """The mmap-cache middle-mutation hazard (ROADMAP): the O(1) "fast"
+    fingerprint only sees geometry + edge texts, so an in-place mutation of
+    a middle document is a DOCUMENTED stale hit; the opt-in "full" content
+    hash must rebuild instead."""
+    texts = [[i, i + 1] for i in range(40)]
+    mutated = [list(t) for t in texts]
+    mutated[20] = [999, 998]                       # middle doc, edges intact
+
+    # fast (default): stale reuse — the documented hazard, asserted so the
+    # contract is pinned, not accidental.
+    fast = str(tmp_path / "fast")
+    E.TokenStore.build(texts, max_len=4, chunk=8, backing="mmap",
+                       cache_dir=fast)
+    stale = E.TokenStore.build(mutated, max_len=4, chunk=8, backing="mmap",
+                               cache_dir=fast)
+    assert stale.reused                            # cache NOT invalidated
+    assert np.asarray(stale.tokens)[2, 4, 0] == 20  # still the old content
+
+    # full: the same mutation rebuilds the cache
+    full = str(tmp_path / "full")
+    first = E.TokenStore.build(texts, max_len=4, chunk=8, backing="mmap",
+                               cache_dir=full, fingerprint="full")
+    assert not first.reused
+    # unchanged content still reuses under "full" (the amortization holds)
+    assert E.TokenStore.build(texts, max_len=4, chunk=8, backing="mmap",
+                              cache_dir=full, fingerprint="full").reused
+    fresh = E.TokenStore.build(mutated, max_len=4, chunk=8, backing="mmap",
+                               cache_dir=full, fingerprint="full")
+    assert not fresh.reused                        # mutation detected
+    assert np.asarray(fresh.tokens)[2, 4, 0] == 999
+    # switching fingerprint modes never trusts the other mode's marker
+    assert not E.TokenStore.build(mutated, max_len=4, chunk=8,
+                                  backing="mmap", cache_dir=full).reused
+    with pytest.raises(ValueError):
+        E.TokenStore.build(texts, max_len=4, chunk=8, fingerprint="bogus")
+
+
 def test_token_store_mmap_readonly_and_empty(tmp_path):
     store = E.TokenStore.build([[1], [2]], max_len=3, chunk=2,
                                backing="mmap", cache_dir=str(tmp_path / "c"))
@@ -215,7 +253,28 @@ def test_pipeline_double_buffered_matches_sync(ds):
     assert sync[0] == dbuf[0] and sync[1] == dbuf[1]
 
 
-def test_streaming_engine_rejects_unknown_staging(ds):
+def test_pipeline_staging_depth_sweep(ds):
+    """The configurable prefetch depth (ValidationConfig.staging_depth) must
+    not change results: depths 1, 2, and 4 produce bit-for-bit identical
+    runs/scores/metrics — deeper pipelines only stage further ahead."""
+    spec = _toy_spec()
+    params = spec.init(jax.random.PRNGKey(3))
+    ref = None
+    for depth in (1, 2, 4):
+        got = _run_pipeline(ds, spec, params, chunk_size=48,
+                            staging_depth=depth)
+        if ref is None:
+            ref = got
+        else:
+            assert got[0] == ref[0] and got[1] == ref[1]
+            assert got[2].metrics == ref[2].metrics
+    # the depth actually reaches the engine (not silently defaulted)
+    vcfg = ValidationConfig(staging_depth=4)
+    pipe = ValidationPipeline(spec, ds.corpus, ds.queries, ds.qrels, vcfg)
+    assert pipe.engine.staging_depth == 4
+
+
+def test_streaming_engine_rejects_unknown_staging(ds, tmp_path):
     spec = _toy_spec()
     with pytest.raises(ValueError):
         ValidationPipeline(spec, ds.corpus, ds.queries, ds.qrels,
@@ -223,6 +282,14 @@ def test_streaming_engine_rejects_unknown_staging(ds):
     with pytest.raises(ValueError):
         ValidationPipeline(spec, ds.corpus, ds.queries, ds.qrels,
                            ValidationConfig(token_backing="mmap"))  # no dir
+    with pytest.raises(ValueError):
+        ValidationPipeline(spec, ds.corpus, ds.queries, ds.qrels,
+                           ValidationConfig(staging_depth=0))
+    with pytest.raises(ValueError):
+        ValidationPipeline(spec, ds.corpus, ds.queries, ds.qrels,
+                           ValidationConfig(token_backing="mmap",
+                                            mmap_dir=str(tmp_path / "fp"),
+                                            token_fingerprint="bogus"))
 
 
 def test_mmap_store_via_validator_multiple_checkpoints(tmp_path, ds):
