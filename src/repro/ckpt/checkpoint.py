@@ -86,7 +86,14 @@ def save(root: str, step: int, tree: Any, extra: Optional[dict] = None) -> str:
         f.write("ok")
         f.flush()
         os.fsync(f.fileno())
-    _fsync_dir(final)
+    try:
+        _fsync_dir(final)
+    except FileNotFoundError:
+        # benign race: the marker made the checkpoint visible, and an
+        # aggressive consumer (quality-aware GC on the validator thread)
+        # may validate AND evict it before this trailing durability fsync —
+        # the directory is gone on purpose; there is nothing left to sync.
+        pass
     return final
 
 
@@ -149,6 +156,18 @@ def latest_step(root: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def read_extra(root: str, step: int) -> dict:
+    """The manifest's user metadata, without loading any arrays — cheap
+    enough to scan when picking a restore candidate (e.g. the trainer
+    skipping ``virtual`` ensemble checkpoints that carry no optimizer
+    state)."""
+    path = _step_dir(root, step)
+    if not is_committed(path):
+        raise FileNotFoundError(f"checkpoint {path} not committed")
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f).get("extra", {})
+
+
 def restore(root: str, step: Optional[int] = None, *, shardings: Any = None):
     """Restore (tree, extra). ``shardings``: optional pytree of Shardings
     (same structure) -> leaves are placed for an arbitrary target mesh,
@@ -180,14 +199,39 @@ def restore(root: str, step: Optional[int] = None, *, shardings: Any = None):
     return tree, manifest["extra"]
 
 
-def gc_checkpoints(root: str, keep_last: int,
-                   protect: Iterable[int] = ()) -> list[int]:
+def gc_checkpoints(root: str, keep_last: int = 0,
+                   protect: Iterable[int] = (), *,
+                   keep: Optional[Iterable[int]] = None,
+                   horizon: Optional[int] = None) -> list[int]:
     """Delete old committed checkpoints, never touching ``protect`` steps
-    (checkpoints the validator has not finished). Returns deleted steps."""
+    (checkpoints the validator has not finished). Returns deleted steps.
+
+    Two retention shapes:
+      * recency window (default): keep the last ``keep_last`` steps
+        (``keep_last == 0`` keeps everything);
+      * explicit set: ``keep`` names exactly the steps to retain — the
+        quality-aware mode, fed top-k-by-metric from the control plane's
+        ``CheckpointSelector`` (``protect`` still applies on top).
+
+    ``horizon`` (keep-mode only) is the TOCTOU guard: the newest step the
+    caller KNEW about when computing keep/protect.  A checkpoint committed
+    after that snapshot (step > horizon) has no quality verdict yet and
+    survives this round — the next decision, which ranks or protects it,
+    owns its fate.  Defaults to ``max(keep | protect)``; an empty decision
+    deletes nothing.
+    """
     steps = list_steps(root)
     protected = set(protect)
-    candidates = [s for s in steps[:-keep_last] if s not in protected] \
-        if keep_last > 0 else []
+    if keep is not None:
+        keep_set = set(keep) | protected
+        if horizon is None:
+            horizon = max(keep_set) if keep_set else None
+        candidates = [] if horizon is None else \
+            [s for s in steps if s not in keep_set and s <= horizon]
+    elif keep_last > 0:
+        candidates = [s for s in steps[:-keep_last] if s not in protected]
+    else:
+        candidates = []
     for s in candidates:
         shutil.rmtree(_step_dir(root, s), ignore_errors=True)
     return candidates

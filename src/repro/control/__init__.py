@@ -1,0 +1,27 @@
+"""Convergence control plane: the feedback half of Asyncval.
+
+Consumes the validation ledger that the async validator produces and closes
+the loop — checkpoint selection + quality-aware retention (``selection``),
+asynchronous early stopping via an atomic STOP marker (``earlystop``),
+checkpoint-ensemble virtual checkpoints (``ensemble``) — with every decision
+recorded as a replayable JSONL event (``events``).  ``plane.ControlPlane``
+bundles them behind the ``AsyncValidator(controller=...)`` hook.
+"""
+
+from repro.control.earlystop import (EarlyStopConfig, EarlyStopController,
+                                     stop_requested, write_stop_marker)
+from repro.control.ensemble import (average_params, greedy_soup,
+                                    materialize_virtual, uniform_soup)
+from repro.control.events import (ACTUATION_KINDS, DECISION_KINDS,
+                                  ControlEvent, ControlEventLog)
+from repro.control.plane import ControlConfig, ControlPlane, replay_ledger
+from repro.control.selection import CheckpointSelector, SelectionConfig
+
+__all__ = [
+    "ACTUATION_KINDS", "DECISION_KINDS", "ControlEvent", "ControlEventLog",
+    "CheckpointSelector", "SelectionConfig",
+    "EarlyStopConfig", "EarlyStopController", "stop_requested",
+    "write_stop_marker",
+    "average_params", "greedy_soup", "materialize_virtual", "uniform_soup",
+    "ControlConfig", "ControlPlane", "replay_ledger",
+]

@@ -1,0 +1,114 @@
+"""Checkpoint ensembles: top-k weight averaging and greedy metric-guided soup.
+
+Checkpoint Ensembles (Chen et al., 2017) / model soups: the best "checkpoint"
+of a run is often a *combination* of several.  Because the selector already
+ranks checkpoints by validation metric, ensembling is a pure consumer:
+
+  * ``uniform_soup``  — average the weights of the given steps.
+  * ``greedy_soup``   — best-first: start from the top-ranked checkpoint and
+    greedily keep each next candidate only if adding it does not hurt the
+    validation score; by construction the result scores >= the best single
+    checkpoint under the same ``score_fn``.
+
+``materialize_virtual`` commits the soup through the ordinary two-phase
+``ckpt.save`` with the trainer's ``{"params", "opt_state"}`` state shape, so
+downstream (watcher -> AsyncValidator -> StreamingEngine -> ledger -> GC) a
+virtual checkpoint is indistinguishable from a trained one — it is
+re-validated through exactly the same path and lands in the same ledger.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.ckpt import checkpoint as ckpt
+from repro.core.pipeline import params_from_checkpoint
+
+try:                                    # params trees are jax pytrees
+    import jax
+    _tree_map = jax.tree_util.tree_map
+except ImportError:                     # pragma: no cover - jax is baked in
+    _tree_map = None
+
+VIRTUAL_KEY = "ensemble_of"
+
+
+def average_params(trees: Sequence[Any],
+                   weights: Optional[Sequence[float]] = None) -> Any:
+    """Leaf-wise weighted mean; accumulates in float64, restores leaf dtype."""
+    if not trees:
+        raise ValueError("average_params needs at least one tree")
+    if weights is None:
+        weights = [1.0 / len(trees)] * len(trees)
+    if len(weights) != len(trees):
+        raise ValueError("len(weights) != len(trees)")
+    total = float(sum(weights))
+
+    def avg(*leaves):
+        acc = np.zeros(np.shape(leaves[0]), np.float64)
+        for w, leaf in zip(weights, leaves):
+            acc += (w / total) * np.asarray(leaf, np.float64)
+        return acc.astype(np.asarray(leaves[0]).dtype)
+
+    return _tree_map(avg, *trees)
+
+
+def load_params(root: str, step: int,
+                params_extractor: Callable = params_from_checkpoint) -> Any:
+    state, _ = ckpt.restore(root, step)
+    return params_extractor(state)
+
+
+def uniform_soup(root: str, steps: Sequence[int],
+                 params_extractor: Callable = params_from_checkpoint) -> Any:
+    return average_params([load_params(root, s, params_extractor)
+                           for s in steps])
+
+
+def greedy_soup(root: str, ranked_steps: Sequence[int],
+                score_fn: Callable[[Any], float], *, mode: str = "max",
+                params_extractor: Callable = params_from_checkpoint,
+                ) -> Tuple[Any, List[int], float]:
+    """Metric-guided soup over ``ranked_steps`` (best single first).
+
+    ``score_fn(params) -> float`` must be the SAME scoring the selector
+    ranked by (e.g. ``pipeline.validate_params(p).metrics[m]``) for the
+    >= best-single guarantee to be meaningful.  Returns
+    ``(params, member_steps, score)``."""
+    if not ranked_steps:
+        raise ValueError("greedy_soup needs at least one ranked step")
+    better = (lambda a, b: a >= b) if mode == "max" else (lambda a, b: a <= b)
+    members = [ranked_steps[0]]
+    trees = [load_params(root, ranked_steps[0], params_extractor)]
+    params = trees[0]
+    score = float(score_fn(params))
+    for step in ranked_steps[1:]:
+        cand_trees = trees + [load_params(root, step, params_extractor)]
+        cand = average_params(cand_trees)
+        cand_score = float(score_fn(cand))
+        if better(cand_score, score):
+            members.append(step)
+            trees = cand_trees
+            params, score = cand, cand_score
+    return params, members, score
+
+
+def materialize_virtual(root: str, params: Any, *, members: Sequence[int],
+                        step: Optional[int] = None,
+                        extra: Optional[dict] = None) -> int:
+    """Two-phase-commit the soup as a regular checkpoint; returns its step.
+
+    Default step id is ``max(committed) + 1`` so the virtual checkpoint
+    appears as the newest — the watcher discovers it like any other and the
+    ledger records its re-validation."""
+    if step is None:
+        steps = ckpt.list_steps(root)
+        step = (max(steps) + 1) if steps else 0
+    # "virtual" marks a checkpoint with no optimizer/training state: the
+    # trainer must not resume from it (Trainer.__init__ skips these).
+    meta = {"step": step, "virtual": True,
+            VIRTUAL_KEY: [int(s) for s in members], **(extra or {})}
+    ckpt.save(root, step, {"params": params, "opt_state": {}}, extra=meta)
+    return step

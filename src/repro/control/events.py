@@ -1,0 +1,98 @@
+"""Control-plane event ledger — every controller decision as a JSONL row.
+
+The validation ledger records *what happened* (metrics per checkpoint); this
+log records *what the control plane decided about it* (rankings, stop
+verdicts, retention sets, ensemble builds).  Two properties matter:
+
+  * durability — each event is flushed + fsync'd on append, mirroring the
+    two-phase-commit discipline of the checkpoint layer, so a crashed
+    controller can be audited from disk;
+  * determinism — events carry NO wall-clock state.  Decisions are a pure
+    function of the validation rows observed (in observation order), so
+    replaying a ledger offline reproduces the identical decision sequence
+    (tests/test_control_integration.py locks this down).
+
+Events split into two classes:
+
+  * decisions  (``select``, ``stop``) — pure outputs of the controllers;
+    byte-identical under offline replay.
+  * actuations (``gc``, ``ensemble``, ``stop_marker``) — side effects on the
+    filesystem (deletions, marker files, virtual checkpoints).  Recorded for
+    audit but excluded from replay comparison: they depend on external state
+    (what was committed/protected at that instant).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+from typing import Iterator, List, Optional
+
+DECISION_KINDS = frozenset({"select", "stop"})
+ACTUATION_KINDS = frozenset({"gc", "ensemble", "stop_marker"})
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlEvent:
+    seq: int
+    kind: str
+    step: int
+    payload: dict
+
+    def to_json(self) -> str:
+        return json.dumps({"seq": self.seq, "kind": self.kind,
+                           "step": self.step, **self.payload},
+                          sort_keys=True)
+
+
+class ControlEventLog:
+    """Append-only, fsync'd, restart-loading event log (thread-safe)."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._events: List[ControlEvent] = []
+        self._lock = threading.Lock()
+        if path and os.path.exists(path):
+            with open(path) as f:
+                for line in f:
+                    if line.strip():
+                        rec = json.loads(line)
+                        seq, kind, step = (rec.pop("seq"), rec.pop("kind"),
+                                           rec.pop("step"))
+                        self._events.append(ControlEvent(
+                            seq=int(seq), kind=kind, step=int(step),
+                            payload=rec))
+
+    def emit(self, kind: str, step: int, **payload) -> ControlEvent:
+        with self._lock:
+            ev = ControlEvent(seq=len(self._events), kind=kind,
+                              step=int(step), payload=payload)
+            self._events.append(ev)
+            if self.path:
+                with open(self.path, "a") as f:
+                    f.write(ev.to_json() + "\n")
+                    f.flush()
+                    os.fsync(f.fileno())
+            return ev
+
+    def events(self) -> List[ControlEvent]:
+        with self._lock:
+            return list(self._events)
+
+    def decisions(self) -> List[ControlEvent]:
+        """Replay-comparable subset: pure decisions, renumbered densely so
+        interleaved actuations (absent offline) don't shift the seq ids."""
+        out = []
+        for ev in self.events():
+            if ev.kind in DECISION_KINDS:
+                out.append(dataclasses.replace(ev, seq=len(out)))
+        return out
+
+    def __iter__(self) -> Iterator[ControlEvent]:
+        return iter(self.events())
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._events)

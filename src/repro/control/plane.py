@@ -1,0 +1,190 @@
+"""ControlPlane — the asynchronous feedback half of Asyncval, in one object.
+
+The seed repo's data path is one-way: trainer -> checkpoints -> validator ->
+ledger.  The control plane closes the loop without ever putting validation
+on the training hot path:
+
+    ledger row --> CheckpointSelector --> quality-aware GC (top-k ∪ protect)
+               --> EarlyStopController --> atomic STOP marker (trainer polls)
+               --> (after stop) greedy/uniform checkpoint soup -->
+                   virtual checkpoint, re-validated via the normal path
+
+It plugs into ``AsyncValidator(controller=...)``: the validator invokes
+``on_result`` after every ledger append (on the validator thread — the
+trainer never sees it).  The trainer's only coupling is the STOP marker file
+and the optional ``note_train`` feed of train losses (for the overfit
+detector's train-vs-validation gap trend).
+
+Every decision is an event in a :class:`ControlEventLog`;
+:func:`replay_ledger` re-derives the full decision sequence offline from
+validation-ledger rows alone — byte-identical, which makes control policies
+testable without ever running a trainer.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.ckpt import checkpoint as ckpt
+from repro.control.earlystop import EarlyStopConfig, EarlyStopController
+from repro.control.ensemble import greedy_soup, materialize_virtual, \
+    uniform_soup
+from repro.control.events import ControlEvent, ControlEventLog
+from repro.control.selection import CheckpointSelector, SelectionConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlConfig:
+    metric: str = "MRR@10"
+    mode: str = "max"              # max | min (is bigger better?)
+    keep_top_k: int = 0            # 0 = quality-aware GC disabled
+    ema: float = 0.0               # selection smoothing (0 = off)
+    early_stop: bool = False
+    patience: int = 3
+    min_delta: float = 0.0
+    overfit_window: int = 0        # >= 3 enables the overfit detector
+    overfit_min_slope: float = 0.0
+    ensemble_top_k: int = 0        # 0 = ensembling disabled
+    ensemble_greedy: bool = True   # greedy metric-guided vs uniform soup
+
+    @property
+    def ranking_depth(self) -> int:
+        return max(self.keep_top_k, self.ensemble_top_k, 1)
+
+
+class ControlPlane:
+    def __init__(self, ckpt_root: Optional[str], cfg: ControlConfig, *,
+                 stop_path: Optional[str] = None,
+                 event_path: Optional[str] = None):
+        self.ckpt_root = ckpt_root
+        self.cfg = cfg
+        self.events = ControlEventLog(event_path)
+        self.selector = CheckpointSelector(
+            SelectionConfig(metric=cfg.metric, mode=cfg.mode,
+                            top_k=cfg.ranking_depth, ema=cfg.ema),
+            event_log=self.events)
+        self.earlystop: Optional[EarlyStopController] = None
+        if cfg.early_stop:
+            self.earlystop = EarlyStopController(
+                EarlyStopConfig(metric=cfg.metric, mode=cfg.mode,
+                                patience=cfg.patience,
+                                min_delta=cfg.min_delta,
+                                overfit_window=cfg.overfit_window,
+                                overfit_min_slope=cfg.overfit_min_slope),
+                stop_path=stop_path, event_log=self.events)
+        self._train_lock = threading.Lock()
+        self._train_steps: List[int] = []          # sorted
+        self._train_loss: Dict[int, float] = {}
+        self.ensemble_step: Optional[int] = None
+        self.ensemble_members: List[int] = []
+
+    # -- train-side feed (overfit detector input) ---------------------------
+    def note_train(self, step: int, metrics: Dict[str, Any]) -> None:
+        """Record a train-loop loss (called from the trainer's metrics hook;
+        thread-safe, never blocks on validation state)."""
+        if "loss" not in metrics:
+            return
+        with self._train_lock:
+            if step not in self._train_loss:
+                bisect.insort(self._train_steps, step)
+            self._train_loss[step] = float(metrics["loss"])
+
+    def train_loss_for(self, step: int) -> Optional[float]:
+        """Latest train loss at or before ``step`` (pure given the feed)."""
+        with self._train_lock:
+            i = bisect.bisect_right(self._train_steps, step)
+            if i == 0:
+                return None
+            return self._train_loss[self._train_steps[i - 1]]
+
+    # -- decision path (pure; shared by online + offline replay) ------------
+    def observe(self, step: int, metrics: Dict[str, float]) -> None:
+        decision = self.selector.observe(step, metrics)
+        if self.earlystop is not None:
+            # early stopping judges the SAME (EMA-smoothed) series the
+            # selector ranks by — with cfg.ema a raw noise spike must not
+            # reset patience or fake an overfit trend.
+            smoothed = {**metrics, self.cfg.metric: decision["value"]}
+            self.earlystop.observe(step, smoothed,
+                                   train_loss=self.train_loss_for(step))
+
+    @property
+    def stopped(self) -> bool:
+        return self.earlystop is not None and self.earlystop.stopped
+
+    def rehydrate(self, rows) -> int:
+        """Warm the selector's ranking from a previous session's
+        validation-ledger rows (``ValidationLedger.rows()``).
+
+        Restart safety for quality-aware GC: the ledger makes validation
+        idempotent (old steps are never re-validated), so without this a
+        fresh selector would rank only the new session's steps and GC the
+        previous session's best checkpoints.  Early stopping is NOT
+        rehydrated — a stop verdict must come from evidence this session
+        gathers (a continued run deliberately gets fresh patience)."""
+        n = 0
+        for row in rows:
+            self.selector.observe(int(row["step"]), row["metrics"])
+            n += 1
+        return n
+
+    # -- validator hook (decisions + actuations) ----------------------------
+    def on_result(self, result: Any, validator: Any = None) -> None:
+        """AsyncValidator post-record hook (runs on the validator thread)."""
+        self.observe(result.step, result.metrics)
+        if self.cfg.keep_top_k > 0 and self.ckpt_root and validator is not None:
+            self.selector.gc(self.ckpt_root,
+                             protect=validator.protect_set(),
+                             k=self.cfg.keep_top_k)
+
+    # -- ensemble (after training stopped / drained) ------------------------
+    def build_ensemble(self, score_fn: Callable[[Any], float], *,
+                       step: Optional[int] = None) -> Optional[int]:
+        """Soup the top-k ranked checkpoints into a committed virtual
+        checkpoint; returns its step (None if ensembling is disabled or
+        fewer than two members are rankable)."""
+        if self.cfg.ensemble_top_k <= 0 or not self.ckpt_root:
+            return None
+        ranked = self.selector.top_steps(self.cfg.ensemble_top_k)
+        # only checkpoints still on disk can be souped: when the ranking
+        # runs deeper than the retention budget (ensemble_top_k >
+        # keep_top_k), quality-aware GC has already deleted the tail.
+        # Filtered here in the actuation layer — the selector's decision
+        # state must not depend on filesystem effects, or offline replay
+        # would diverge.
+        available = set(ckpt.list_steps(self.ckpt_root))
+        ranked = [s for s in ranked if s in available]
+        if len(ranked) < 2:
+            return None
+        if self.cfg.ensemble_greedy:
+            params, members, score = greedy_soup(
+                self.ckpt_root, ranked, score_fn, mode=self.cfg.mode)
+        else:
+            params = uniform_soup(self.ckpt_root, ranked)
+            members, score = list(ranked), float(score_fn(params))
+        vstep = materialize_virtual(self.ckpt_root, params, members=members,
+                                    step=step)
+        self.ensemble_step, self.ensemble_members = vstep, members
+        self.events.emit("ensemble", vstep, members=members, score=score,
+                         greedy=self.cfg.ensemble_greedy)
+        return vstep
+
+
+def replay_ledger(rows, cfg: ControlConfig, *,
+                  train_history=None) -> ControlPlane:
+    """Offline replay: re-derive the decision sequence from validation-ledger
+    rows (``ValidationLedger.rows()``, insertion order).
+
+    Returns a plane whose ``events.decisions()`` is identical to the online
+    run's — no filesystem access, no markers, no deletions.
+    ``train_history``: optional ``[(step, loss), ...]`` feed for the overfit
+    detector (the trainer's logged losses)."""
+    plane = ControlPlane(None, cfg, stop_path=None, event_path=None)
+    for step, loss in (train_history or []):
+        plane.note_train(step, {"loss": loss})
+    for row in rows:
+        plane.observe(int(row["step"]), row["metrics"])
+    return plane

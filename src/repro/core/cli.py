@@ -134,6 +134,56 @@ def main(argv=None) -> int:
     ap.add_argument("--watch", action="store_true",
                     help="keep polling for new checkpoints (async mode)")
     ap.add_argument("--poll_interval", type=float, default=5.0)
+    # -- convergence control plane (repro.control) --------------------------
+    ap.add_argument("--policy", default="fifo",
+                    choices=["fifo", "latest_first", "stride", "budget"],
+                    help="checkpoint scheduling: validate every checkpoint "
+                         "in order (fifo), only the newest (latest_first), "
+                         "every --stride-th step (stride), or let the "
+                         "budget policy adapt the stride automatically from "
+                         "observed validation latency vs checkpoint cadence "
+                         "(queue depth) so staleness stays bounded")
+    ap.add_argument("--stride", type=int, default=1,
+                    help="step modulus for --policy stride")
+    ap.add_argument("--keep_top_k", type=int, default=0,
+                    help="quality-aware checkpoint GC: after each "
+                         "validation keep only the top-k checkpoints by the "
+                         "control metric plus anything not yet validated "
+                         "(0 = GC disabled, keep everything)")
+    ap.add_argument("--ema", type=float, default=0.0,
+                    help="EMA smoothing factor for the selection metric "
+                         "(0 = raw values; 0<ema<1 de-noises subset "
+                         "validation before ranking/early-stop decisions)")
+    ap.add_argument("--early_stop", action="store_true",
+                    help="enable asynchronous early stopping: when the "
+                         "control metric plateaus, an atomic STOP marker "
+                         "file is published for the trainer to poll "
+                         "(training halts without ever blocking on "
+                         "validation)")
+    ap.add_argument("--early_stop_metric", default=None,
+                    help="control-plane metric (default: first --metrics "
+                         "entry; AverageRank is minimized, others "
+                         "maximized)")
+    ap.add_argument("--early_stop_patience", type=int, default=3,
+                    help="evaluations without >= --early_stop_min_delta "
+                         "improvement before stopping")
+    ap.add_argument("--early_stop_min_delta", type=float, default=0.0,
+                    help="improvement below this counts as a plateau "
+                         "evaluation")
+    ap.add_argument("--early_stop_window", type=int, default=0,
+                    help="history-based overfit detector: sliding window "
+                         "(>= 3) over which a worsening validation trend "
+                         "with a still-improving train loss triggers a "
+                         "stop; needs a train-loss feed, so it only "
+                         "activates in-process (repro.launch.train), not in "
+                         "this validator-only CLI (0 = off)")
+    ap.add_argument("--stop_file", default=None,
+                    help="STOP marker path (default: <logging_dir>/STOP)")
+    ap.add_argument("--ensemble_top_k", type=int, default=0,
+                    help="after validation ends, greedy-soup the top-k "
+                         "checkpoints by the control metric into a virtual "
+                         "checkpoint, commit it via two-phase ckpt.save and "
+                         "re-validate it through the normal path (0 = off)")
     args = ap.parse_args(argv)
 
     from repro.core.metrics import read_trec_qrels, read_trec_run
@@ -142,6 +192,7 @@ def main(argv=None) -> int:
     from repro.core.samplers import (FullCorpus, QrelPool, RerankTopK,
                                      RunFileTopK)
     from repro.core.validator import AsyncValidator
+    from repro.core.watcher import BudgetPolicy, Policy
 
     spec = build_encoder(args)
     corpus = load_texts(sorted(
@@ -191,11 +242,53 @@ def main(argv=None) -> int:
         else:                                # wandb -> JSONL twin
             loggers.append(JSONLLogger(os.path.join(
                 logdir, f"{args.run_name}_metrics.jsonl")))
+    policy = BudgetPolicy() if args.policy == "budget" \
+        else Policy(kind=args.policy, stride=args.stride)
+
+    control = None
+    if args.keep_top_k or args.early_stop or args.ensemble_top_k:
+        from repro.control import ControlConfig, ControlPlane
+        cmetric = args.early_stop_metric or args.metrics[0]
+        computed = set(args.metrics) | ({"AverageRank"}
+                                        if args.mode == "average_rank"
+                                        else set())
+        if cmetric not in computed:
+            # fail fast: a mismatched control metric would otherwise
+            # KeyError inside every controller invocation, silently
+            # disabling GC/early-stop/ensembling for the whole run.
+            ap.error(f"--early_stop_metric {cmetric!r} is not computed by "
+                     f"this run; choose from {sorted(computed)}")
+        ccfg = ControlConfig(
+            metric=cmetric,
+            mode="min" if cmetric.lower().startswith("averagerank") else "max",
+            keep_top_k=args.keep_top_k, ema=args.ema,
+            early_stop=args.early_stop,
+            patience=args.early_stop_patience,
+            min_delta=args.early_stop_min_delta,
+            overfit_window=args.early_stop_window,
+            ensemble_top_k=args.ensemble_top_k)
+        stop_path = None
+        if args.early_stop:
+            stop_path = args.stop_file or os.path.join(logdir, "STOP")
+            if os.path.exists(stop_path):
+                # stale verdict from a previous session: a trainer polling
+                # this path must not halt before we decide anything.
+                os.remove(stop_path)
+        control = ControlPlane(
+            args.ckpts_dir, ccfg, stop_path=stop_path,
+            event_path=os.path.join(logdir, f"{args.run_name}_control.jsonl"))
+
     validator = AsyncValidator(
         args.ckpts_dir, pipe, logger=MultiLogger(*loggers),
+        policy=policy, controller=control,
         max_num_valid=args.max_num_valid,
         ledger_path=os.path.join(logdir, f"{args.run_name}_ledger.jsonl"),
         poll_interval_s=args.poll_interval)
+    if control is not None:
+        # restart: warm the ranking from the prior session's ledger rows —
+        # old steps are never re-validated (idempotency), and a cold
+        # selector would GC the previous session's best checkpoints.
+        control.rehydrate(validator.ledger.rows())
 
     if args.watch:
         print("[asyncval] watching", args.ckpts_dir, file=sys.stderr)
@@ -207,6 +300,12 @@ def main(argv=None) -> int:
                     for r in validator.results[-n:]:
                         print(f"[asyncval] step {r.step}: {r.metrics} "
                               f"({r.timings['total_s']:.1f}s)")
+                if control is not None and control.stopped and n == 0:
+                    # trainer-side STOP is published; the backlog is drained
+                    print("[asyncval] early stop "
+                          f"({control.earlystop.reason}) — exiting watch",
+                          file=sys.stderr)
+                    break
                 time.sleep(args.poll_interval)
         except KeyboardInterrupt:
             pass
@@ -215,6 +314,21 @@ def main(argv=None) -> int:
         for r in validator.results:
             print(f"[asyncval] step {r.step}: {r.metrics} "
                   f"({r.timings['total_s']:.1f}s)")
+
+    if control is not None and args.ensemble_top_k:
+        cmetric = control.cfg.metric
+        vstep = control.build_ensemble(
+            lambda p: pipe.validate_params(p).metrics[cmetric])
+        if vstep is not None:
+            # score the soup through the normal restore->pipeline->ledger
+            # path, bypassing the watcher policy (under stride/budget the
+            # soup's step id may never be policy-selected).
+            validator.validate_step(vstep)
+            res = next((r for r in validator.results if r.step == vstep),
+                       None)
+            if res is not None:
+                print(f"[asyncval] ensemble step {vstep} "
+                      f"(soup of {control.ensemble_members}): {res.metrics}")
     return 0 if not validator.errors else 1
 
 

@@ -24,6 +24,14 @@ class CSVLogger(BaseLogger):
         self._lock = threading.Lock()
         self._fields: Optional[List[str]] = None
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        # restart safety: adopt an existing file's header so the first log()
+        # of a fresh process APPENDS instead of truncating the history a
+        # prior run (and the control plane's consumers) already wrote.
+        if os.path.exists(path):
+            with open(path, newline="") as f:
+                header = next(csv.reader(f), None)
+            if header:
+                self._fields = list(header)
 
     def log(self, step: int, metrics: Dict[str, float]) -> None:
         with self._lock:
@@ -32,7 +40,7 @@ class CSVLogger(BaseLogger):
             if self._fields is None or any(f not in self._fields
                                            for f in new_fields):
                 old_rows = []
-                if self._fields is not None and os.path.exists(self.path):
+                if os.path.exists(self.path):
                     with open(self.path) as f:
                         old_rows = list(csv.DictReader(f))
                 self._fields = sorted(set(new_fields)

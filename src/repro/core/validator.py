@@ -26,10 +26,17 @@ from repro.core.watcher import CheckpointWatcher, Policy
 
 
 class ValidationLedger:
-    """Append-only record of validated steps (idempotent restarts)."""
+    """Append-only record of validated steps (idempotent restarts).
+
+    Concurrency-safe: the control plane (selector / early-stop / GC) reads
+    this ledger from the validator thread while ``record`` may run — a lock
+    guards the row map, appends are flushed + fsync'd so no consumer (in
+    this process or a crash-restarted one) can observe a torn row, and
+    :meth:`rows` hands out a snapshot instead of the live dict."""
 
     def __init__(self, path: Optional[str]):
         self.path = path
+        self._lock = threading.Lock()
         self._done: Dict[int, dict] = {}
         if path and os.path.exists(path):
             with open(path) as f:
@@ -39,11 +46,19 @@ class ValidationLedger:
                         self._done[int(rec["step"])] = rec
 
     def __contains__(self, step: int) -> bool:
-        return step in self._done
+        with self._lock:
+            return step in self._done
 
     @property
     def validated_steps(self) -> List[int]:
-        return sorted(self._done)
+        with self._lock:
+            return sorted(self._done)
+
+    def rows(self) -> List[dict]:
+        """Snapshot of all rows in RECORD order (the order decisions were
+        made in — offline replay of the control plane depends on it)."""
+        with self._lock:
+            return [dict(rec) for rec in self._done.values()]
 
     def record(self, result: ValidationResult) -> None:
         rec = {"step": result.step, "metrics": result.metrics,
@@ -52,10 +67,13 @@ class ValidationLedger:
                # audit (streaming vs materialized vs sharded) attribute every
                # ledger row long after the run.
                "engine": getattr(result, "engine", "")}
-        self._done[result.step] = rec
-        if self.path:
-            with open(self.path, "a") as f:
-                f.write(json.dumps(rec) + "\n")
+        with self._lock:
+            self._done[result.step] = rec
+            if self.path:
+                with open(self.path, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+                    f.flush()
+                    os.fsync(f.fileno())
 
 
 class AsyncValidator:
@@ -68,7 +86,8 @@ class AsyncValidator:
                  params_extractor: Callable = params_from_checkpoint,
                  shardings: Any = None,
                  engine: Any = None,
-                 max_retries: int = 2):
+                 max_retries: int = 2,
+                 controller: Any = None):
         self.ckpt_root = ckpt_root
         self.pipeline = pipeline
         # engine injection: swap the validation data path (streaming /
@@ -92,11 +111,30 @@ class AsyncValidator:
         # re-attempts it is given up on and stays in ``errors``.
         self.max_retries = max_retries
         self._failures: Dict[int, int] = {}
+        # control-plane hook: an object with on_result(result, validator),
+        # invoked after every ledger append (selection / early stopping /
+        # quality-aware GC — see repro.control.plane.ControlPlane).  Runs on
+        # the validator thread; controller faults are captured in ``errors``
+        # so a control bug can never take validation down.
+        self.controller = controller
 
     # -- core single-pass --------------------------------------------------
     def validate_pending(self) -> int:
+        return self._validate(self.watcher.poll())
+
+    def validate_step(self, step: int) -> int:
+        """Validate one specific committed step NOW, bypassing the watcher
+        policy (still ledger-idempotent, still running the full logger /
+        controller path).  The control plane uses this to score a virtual
+        ensemble checkpoint: under a skipping policy (stride/budget/
+        latest_first) the soup's step id may never be policy-selected, and
+        it must not end up policy-skipped and unscored."""
+        self.watcher.mark_seen(step)           # claimed: not pending, and
+        return self._validate([step])          # not counted as skipped
+
+    def _validate(self, steps) -> int:
         n = 0
-        for step in self.watcher.poll():
+        for step in steps:
             if self.max_num_valid is not None \
                     and len(self.results) >= self.max_num_valid:
                 break
@@ -120,9 +158,18 @@ class AsyncValidator:
             self._failures.pop(step, None)
             self.ledger.record(result)
             self.results.append(result)
+            # adaptive scheduling feedback (BudgetPolicy): observed
+            # validation latency drives the stride controller.
+            self.watcher.policy.observe_latency(
+                float(result.timings.get("total_s", 0.0)))
             if self.logger is not None:
                 self.logger.log(step, {**result.metrics, **result.timings,
                                        "subset_size": result.subset_size})
+            if self.controller is not None:
+                try:
+                    self.controller.on_result(result, self)
+                except Exception as e:
+                    self.errors.append((step, f"controller: {e!r}"))
             n += 1
         return n
 
@@ -156,6 +203,12 @@ class AsyncValidator:
         return self.results
 
     def protect_set(self) -> set:
-        """Steps GC must keep: anything committed but not yet validated."""
+        """Steps GC must keep: committed with a *pending* quality claim —
+        not yet validated and not deliberately passed over by the watcher
+        policy.  Failed-but-retrying (and given-up) steps stay protected;
+        policy-skipped ones (stale/off-stride/over-budget) will never be
+        validated, so protecting them would leak storage forever under
+        skipping policies."""
         committed = set(ckpt.list_steps(self.ckpt_root))
-        return committed - set(self.ledger.validated_steps)
+        return committed - set(self.ledger.validated_steps) \
+            - self.watcher.skipped

@@ -10,11 +10,15 @@ checkpoint cadence at scale):
   * LATEST_FIRST  — always jump to the newest checkpoint, skipping stale ones
                     (bounds validation staleness; skipped steps are recorded).
   * STRIDE(k)     — validate every k-th checkpoint.
+  * BUDGET        — :class:`BudgetPolicy`: adapt the stride automatically
+                    from observed validation latency vs checkpoint cadence
+                    (queue depth), bounding staleness without hand-tuning.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Optional, Set
 
 from repro.ckpt import checkpoint as ckpt
@@ -34,9 +38,77 @@ class Policy:
         if self.kind == "latest_first":
             return [max(pending)]
         if self.kind == "stride":
-            return sorted(s for s in pending if (s // max(self.stride, 1))
-                          * self.stride == s or s % self.stride == 0)
+            stride = max(self.stride, 1)
+            return sorted(s for s in pending if s % stride == 0)
         raise ValueError(self.kind)
+
+    # feedback hooks (no-ops here; BudgetPolicy adapts on them) -------------
+    def observe_latency(self, seconds: float) -> None:
+        """Called by the validator after each completed validation."""
+
+    def observe_cadence(self, seconds: float) -> None:
+        """Called by the watcher with the inter-arrival time of checkpoints."""
+
+
+@dataclasses.dataclass
+class BudgetPolicy(Policy):
+    """Self-tuning stride: keep validation throughput within budget.
+
+    Two coupled signals:
+      * queue depth — more pending steps per poll than ``target_depth``
+        means validation is falling behind the checkpoint cadence: double
+        the stride (halve it again once the queue drains).  This is the
+        integrated latency-vs-cadence signal and needs no clocks.
+      * latency/cadence ratio — when both have been observed (EMA-smoothed),
+        their ratio lower-bounds the stride directly: validating every
+        checkpoint is only sustainable when latency <= cadence.
+
+    Selection takes every ``stride``-th pending step counted **from the
+    newest**, so the newest checkpoint is always validated — staleness stays
+    bounded by one validation, whatever the stride.
+    """
+
+    kind: str = "budget"
+    target_depth: int = 1         # pending steps tolerated before widening
+    min_stride: int = 1
+    max_stride: int = 64
+    smooth: float = 0.5           # EMA factor for latency/cadence estimates
+
+    def __post_init__(self):
+        self._stride_f = float(max(self.min_stride, 1))
+        self._latency_ema: Optional[float] = None
+        self._cadence_ema: Optional[float] = None
+
+    def observe_latency(self, seconds: float) -> None:
+        prev = self._latency_ema
+        self._latency_ema = seconds if prev is None else \
+            self.smooth * prev + (1 - self.smooth) * seconds
+
+    def observe_cadence(self, seconds: float) -> None:
+        prev = self._cadence_ema
+        self._cadence_ema = seconds if prev is None else \
+            self.smooth * prev + (1 - self.smooth) * seconds
+
+    @property
+    def effective_stride(self) -> int:
+        return max(1, int(round(self._stride_f)))
+
+    def select(self, pending: List[int]) -> List[int]:
+        if not pending:
+            return []
+        depth = len(pending)
+        if depth > self.target_depth:
+            self._stride_f = min(float(self.max_stride), self._stride_f * 2.0)
+        elif depth <= self.target_depth:
+            self._stride_f = max(float(self.min_stride), self._stride_f / 2.0)
+        if self._latency_ema is not None and self._cadence_ema is not None \
+                and self._cadence_ema > 0:
+            floor = min(float(self.max_stride),
+                        self._latency_ema / self._cadence_ema)
+            self._stride_f = max(self._stride_f, floor)
+        k = self.effective_stride
+        newest_first = sorted(pending, reverse=True)
+        return sorted(newest_first[::k])
 
 
 class CheckpointWatcher:
@@ -45,22 +117,48 @@ class CheckpointWatcher:
         self.root = root
         self.policy = policy or Policy()
         self._seen: Set[int] = set()
+        # steps a policy deliberately passed over (stale under latest_first,
+        # off-stride, over-budget): they will never be validated, carry no
+        # pending quality claim, and so must NOT hold GC protection forever
+        # (validator.protect_set subtracts them).  Distinct from handed-out
+        # steps that failed — those stay protected.
+        self._skipped: Set[int] = set()
+        self._last_arrival_t: Optional[float] = None
         if skip_existing:
             self._seen.update(ckpt.list_steps(root))
 
     def poll(self) -> List[int]:
         """New committed steps since the last poll, policy-ordered."""
         steps = [s for s in ckpt.list_steps(self.root) if s not in self._seen]
+        if steps:
+            now = time.monotonic()
+            if self._last_arrival_t is not None:
+                # inter-arrival estimate for adaptive (budget) policies:
+                # time since the previous discovery, amortized per new step
+                self.policy.observe_cadence(
+                    (now - self._last_arrival_t) / len(steps))
+            self._last_arrival_t = now
         chosen = self.policy.select(steps)
-        # under latest_first, skipped (stale) steps are marked seen too
-        if self.policy.kind == "latest_first":
-            self._seen.update(steps)
-        else:
-            self._seen.update(chosen)
+        # every discovered step is consumed by this poll: chosen ones are
+        # handed out, the rest are policy-skipped (stale under latest_first,
+        # off-stride, over-budget).  Marking BOTH seen keeps the pending
+        # list from regrowing — and being re-filtered — on every poll.
+        self._seen.update(steps)
+        self._skipped.update(set(steps) - set(chosen))
         return chosen
 
+    @property
+    def skipped(self) -> Set[int]:
+        """Steps the policy chose never to validate (snapshot)."""
+        return set(self._skipped)
+
     def mark_seen(self, step: int) -> None:
+        """Claim ``step`` as handled outside poll() (given-up failures, the
+        validator's explicit validate_step): it is consumed, and it is not
+        a policy skip — so it keeps (or regains) GC protection until a
+        verdict lands."""
         self._seen.add(step)
+        self._skipped.discard(step)
 
     def requeue(self, step: int) -> None:
         """Make ``step`` visible to the next :meth:`poll` again.
@@ -69,5 +167,9 @@ class CheckpointWatcher:
         caller knows whether validation succeeded — a checkpoint that fails
         (torn filesystem read, transient OOM) would otherwise be permanently
         swallowed.  The validator calls this on failure so the step is
-        retried on a later poll."""
+        retried on a later poll.  The retried step goes back through the
+        policy: under ``latest_first``/``budget`` a newer checkpoint may win
+        and the failed one is then dropped as stale — that is the staleness
+        bound working as intended, not a lost retry."""
         self._seen.discard(step)
+        self._skipped.discard(step)

@@ -29,11 +29,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ckpt import checkpoint as ckpt
 from repro.configs import registry
+from repro.control import ControlConfig, ControlPlane
 from repro.core.pipeline import ValidationConfig, ValidationPipeline
 from repro.core.reporting import JSONLLogger
 from repro.core.samplers import FullCorpus, RunFileTopK
 from repro.core.validator import AsyncValidator
+from repro.core.watcher import BudgetPolicy, Policy
 from repro.data import corpus as synthetic_ds
 from repro.models import nn
 from repro.models import transformer as tfm
@@ -91,9 +94,24 @@ def run(args) -> dict:
 
     params = nn.materialize(spec.init(jax.random.PRNGKey(args.seed)))
     opt = optim.adamw(args.lr)
+    stop_file = os.path.join(args.workdir, "STOP")
+    # control flags default off so pre-control callers (plain Args objects,
+    # benchmarks) keep the classic produce-only behaviour.
+    patience = getattr(args, "early_stop_patience", 0)
+    min_delta = getattr(args, "early_stop_min_delta", 0.0)
+    overfit_window = getattr(args, "overfit_window", 0)
+    keep_top_k = getattr(args, "keep_top_k", 0)
+    ensemble_top_k = getattr(args, "ensemble_top_k", 0)
+    policy_kind = getattr(args, "policy", "fifo")
+    control_on = patience > 0 or keep_top_k > 0 or ensemble_top_k > 0
+    # a STOP marker is one run's verdict, not the workdir's: clear a stale
+    # one so a restarted/continued run trains instead of halting at step 0.
+    if os.path.exists(stop_file):
+        os.remove(stop_file)
     tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
                          ckpt_dir=ckpt_dir, log_every=args.ckpt_every,
-                         async_save=True)
+                         async_save=True,
+                         stop_file=stop_file if patience > 0 else None)
     trainer = Trainer(tcfg, lambda p, b: contrastive_loss(p, spec, b),
                       opt, params,
                       _contrastive_batches(ds, spec, args.batch_size),
@@ -105,15 +123,43 @@ def run(args) -> dict:
                             k=100, batch_size=args.batch_size)
     pipeline = ValidationPipeline(spec, ds.corpus, ds.queries, ds.qrels, vcfg,
                                   sampler=sampler, baseline_run=baseline_run)
+
+    # convergence control plane: ledger-driven selection + quality-aware GC,
+    # async early stop via the STOP marker, post-run checkpoint ensembling.
+    control = None
+    if control_on:
+        ccfg = ControlConfig(metric="MRR@10", mode="max",
+                             keep_top_k=keep_top_k,
+                             early_stop=patience > 0,
+                             patience=max(patience, 1),
+                             min_delta=min_delta,
+                             overfit_window=overfit_window,
+                             ensemble_top_k=ensemble_top_k)
+        control = ControlPlane(ckpt_dir, ccfg, stop_path=stop_file,
+                               event_path=os.path.join(args.workdir,
+                                                       "control.jsonl"))
+    policy = BudgetPolicy() if policy_kind == "budget" \
+        else Policy(kind=policy_kind, stride=getattr(args, "stride", 1))
     validator = AsyncValidator(
-        ckpt_dir, pipeline,
+        ckpt_dir, pipeline, policy=policy, controller=control,
         logger=JSONLLogger(os.path.join(args.workdir, "valid.jsonl")),
         ledger_path=os.path.join(args.workdir, "ledger.jsonl"))
+    if control is not None:
+        # restart: warm the ranking from the prior session's ledger so
+        # quality-aware GC never forgets already-validated checkpoints
+        # (old steps are skipped by idempotency and would otherwise be
+        # invisible to a cold selector).
+        control.rehydrate(validator.ledger.rows())
+
+    def feed_control(step, m):
+        if control is not None:
+            control.note_train(step, m)     # overfit detector's train side
 
     t0 = time.time()
     if args.sync:
         # paper Fig. 1a: validate inline after each checkpoint
         def on_metrics(step, m):
+            feed_control(step, m)
             if step % args.ckpt_every == 0:
                 trainer.saver.wait()
                 validator.validate_pending()
@@ -122,8 +168,21 @@ def run(args) -> dict:
     else:
         # paper Fig. 1b: validation decoupled, runs while training continues
         validator.start()
-        trainer.run()
+        trainer.run(on_metrics=feed_control)
         validator.stop(drain=True)
+
+    ensemble = None
+    if control is not None and ensemble_top_k > 0:
+        vstep = control.build_ensemble(
+            lambda p: pipeline.validate_params(p).metrics["MRR@10"])
+        if vstep is not None:
+            # policy-proof: score the soup via the normal path even when a
+            # stride/budget policy would never select its step id
+            validator.validate_step(vstep)
+            res = next((r for r in validator.results if r.step == vstep),
+                       None)
+            ensemble = {"step": vstep, "members": control.ensemble_members,
+                        "metrics": res.metrics if res else None}
     wall = time.time() - t0
 
     results = {
@@ -132,6 +191,11 @@ def run(args) -> dict:
         "validated_steps": validator.ledger.validated_steps,
         "metrics": {r.step: r.metrics for r in validator.results},
         "errors": validator.errors,
+        "stopped_early": trainer.stopped_early,
+        "stop_verdict": trainer.stop_verdict,
+        "best_step": control.selector.best_step if control else None,
+        "kept_checkpoints": ckpt.list_steps(ckpt_dir) if control_on else None,
+        "ensemble": ensemble,
     }
     with open(os.path.join(args.workdir, "summary.json"), "w") as f:
         json.dump(results, f, indent=1)
@@ -156,6 +220,23 @@ def main():
     ap.add_argument("--subset", action="store_true")
     ap.add_argument("--sync", action="store_true")
     ap.add_argument("--full", action="store_true")
+    # convergence control plane (repro.control)
+    ap.add_argument("--early-stop-patience", type=int, default=0,
+                    help="evaluations without improvement before the "
+                         "validator publishes the STOP marker (0 = off)")
+    ap.add_argument("--early-stop-min-delta", type=float, default=0.0)
+    ap.add_argument("--overfit-window", type=int, default=0,
+                    help="history-based overfit detector window (>= 3; "
+                         "0 = off)")
+    ap.add_argument("--keep-top-k", type=int, default=0,
+                    help="quality-aware GC: keep top-k checkpoints by "
+                         "MRR@10 plus unvalidated ones (0 = keep all)")
+    ap.add_argument("--ensemble-top-k", type=int, default=0,
+                    help="greedy-soup the top-k checkpoints into a virtual "
+                         "checkpoint after training (0 = off)")
+    ap.add_argument("--policy", default="fifo",
+                    choices=["fifo", "latest_first", "stride", "budget"])
+    ap.add_argument("--stride", type=int, default=1)
     args = ap.parse_args()
     run(args)
 

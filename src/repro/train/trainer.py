@@ -28,6 +28,12 @@ class TrainerConfig:
     log_every: int = 10
     async_save: bool = True
     grad_accum: int = 1
+    # convergence control plane: the async validator's EarlyStopController
+    # publishes its verdict as an atomic marker file; the trainer polls for
+    # it between steps (a single os.path.exists — training halts
+    # asynchronously, it NEVER waits on validation).
+    stop_file: Optional[str] = None
+    stop_poll_every: int = 1        # steps between marker polls
 
 
 def make_train_step(loss_fn: Callable, optimizer: Optimizer,
@@ -91,13 +97,20 @@ class Trainer:
         self.step = 0
         self.params = init_params
         self.opt_state = optimizer.init(init_params)
+        self.stopped_early = False
+        self.stop_verdict: Optional[dict] = None
+        self._last_saved_step: Optional[int] = None
         if cfg.ckpt_dir:
-            latest = ckpt.latest_step(cfg.ckpt_dir)
-            if latest is not None:
+            for latest in reversed(ckpt.list_steps(cfg.ckpt_dir)):
+                # virtual checkpoints (control-plane ensembles) carry no
+                # optimizer state — resume from the newest TRAINED one.
+                if ckpt.read_extra(cfg.ckpt_dir, latest).get("virtual"):
+                    continue
                 state, extra = ckpt.restore(cfg.ckpt_dir, latest)
                 self.params = state["params"]
                 self.opt_state = state["opt_state"]
                 self.step = int(extra.get("step", latest))
+                break
 
     def _save(self):
         if not self.cfg.ckpt_dir:
@@ -108,17 +121,35 @@ class Trainer:
             self.saver.save(self.cfg.ckpt_dir, self.step, state, extra)
         else:
             ckpt.save(self.cfg.ckpt_dir, self.step, state, extra)
+        self._last_saved_step = self.step
+
+    def _stop_requested(self) -> bool:
+        """Poll the control plane's STOP marker (async early stopping)."""
+        if not self.cfg.stop_file:
+            return False
+        if self.step % max(self.cfg.stop_poll_every, 1) != 0:
+            return False
+        from repro.control.earlystop import stop_requested
+        verdict = stop_requested(self.cfg.stop_file)
+        if verdict is None:
+            return False
+        self.stop_verdict = verdict
+        return True
 
     def run(self, on_metrics: Optional[Callable[[int, dict], None]] = None):
         history = []
         while self.step < self.cfg.total_steps:
+            if self._stop_requested():
+                self.stopped_early = True
+                break
             batch = self.batch_iter(self.step)
             self.params, self.opt_state, metrics = self._step_fn(
                 self.params, self.opt_state, batch)
             self.step += 1
-            if self.step % self.cfg.ckpt_every == 0 \
-                    or self.step == self.cfg.total_steps:
-                self._save()
+            # log/notify BEFORE committing the checkpoint: consumers of the
+            # metrics feed (the control plane's train-loss lookup) are then
+            # guaranteed to know about step t before any validator can see
+            # checkpoint t — keeps online decisions == offline replay.
             if self.step % self.cfg.log_every == 0 or \
                     self.step == self.cfg.total_steps:
                 m = {k: float(v) for k, v in metrics.items()}
@@ -127,5 +158,11 @@ class Trainer:
                     self.logger.log(self.step, m)
                 if on_metrics is not None:
                     on_metrics(self.step, m)
+            if self.step % self.cfg.ckpt_every == 0 \
+                    or self.step == self.cfg.total_steps:
+                self._save()
+        if self.stopped_early and self.cfg.ckpt_dir \
+                and self._last_saved_step != self.step:
+            self._save()    # commit the final state for selection/ensembling
         self.saver.wait()
         return history

@@ -140,6 +140,66 @@ def test_validator_cli_staging_and_mmap_flags(filespace):
     assert read_mrr(out_mm) == read_mrr(out_ref)
 
 
+def test_validator_cli_control_plane_flags(filespace):
+    """--keep_top_k / --ensemble_top_k / --early_stop* / --policy budget:
+    one-shot validation ranks the checkpoints, prunes storage to top-k,
+    soups the survivors into a virtual checkpoint and re-validates it."""
+    import json
+    import shutil
+
+    from repro.core.cli import main
+    outdir = filespace["base"] / "out_ctrl"
+    ckdir = filespace["base"] / "ckpts_ctrl"     # GC mutates: use a copy
+    if not ckdir.exists():
+        shutil.copytree(filespace["ckpts"], ckdir)
+    n_before = len(ckpt.list_steps(str(ckdir)))
+    assert n_before >= 3
+    # a stale STOP verdict from a previous session must be cleared, not
+    # re-served to a polling trainer
+    os.makedirs(outdir, exist_ok=True)
+    with open(outdir / "STOP", "w") as f:
+        f.write('{"reason": "stale"}')
+    rc = main(["--query_file", str(filespace["queries"]),
+               "--candidate_dir", str(filespace["corpus_dir"]),
+               "--ckpts_dir", str(ckdir),
+               "--qrel_file", str(filespace["qrels"]),
+               "--q_max_len", "10", "--p_max_len", "26",
+               "--run_name", "t", "--output_dir", str(outdir),
+               "--policy", "budget",
+               "--keep_top_k", "2", "--ensemble_top_k", "2",
+               "--early_stop", "--early_stop_patience", "3",
+               "--encoder", "tests.test_cli:toy_encoder_from_cli"])
+    assert rc == 0
+    # stale marker removed; this session's metrics improve so no new one
+    assert not (outdir / "STOP").exists()
+    # quality-aware GC pruned to top-2 (the soup joins the ranking too)
+    assert len(ckpt.list_steps(str(ckdir))) == 2
+    # every decision is on disk as a replayable JSONL event
+    with open(outdir / "t_control.jsonl") as f:
+        events = [json.loads(l) for l in f if l.strip()]
+    kinds = {e["kind"] for e in events}
+    assert "select" in kinds and "gc" in kinds and "ensemble" in kinds
+    ens = [e for e in events if e["kind"] == "ensemble"][-1]
+    # the virtual checkpoint went through the normal validation path
+    with open(outdir / "t_ledger.jsonl") as f:
+        ledgered = [json.loads(l)["step"] for l in f if l.strip()]
+    assert ens["step"] in ledgered
+
+
+def test_validator_cli_rejects_uncomputed_control_metric(filespace):
+    """A typo'd --early_stop_metric must fail at parse time, not KeyError
+    inside every controller invocation."""
+    from repro.core.cli import main
+    with pytest.raises(SystemExit):
+        main(["--query_file", str(filespace["queries"]),
+              "--candidate_dir", str(filespace["corpus_dir"]),
+              "--ckpts_dir", str(filespace["ckpts"]),
+              "--qrel_file", str(filespace["qrels"]),
+              "--metrics", "MRR@10",
+              "--early_stop", "--early_stop_metric", "mrr@10",
+              "--encoder", "tests.test_cli:toy_encoder_from_cli"])
+
+
 def test_validator_cli_rerank_mode(filespace):
     from repro.core.cli import main
     outdir = filespace["base"] / "out_rr"

@@ -1,0 +1,571 @@
+"""Convergence control plane units: event log, selection, early stopping,
+ensembling, quality-aware GC — plus the reporting/ledger hardening the
+control consumers depend on."""
+
+import json
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+from repro.control import (ControlConfig, ControlPlane, ControlEventLog,
+                           CheckpointSelector, EarlyStopConfig,
+                           EarlyStopController, SelectionConfig,
+                           average_params, greedy_soup, materialize_virtual,
+                           replay_ledger, stop_requested, uniform_soup,
+                           write_stop_marker)
+from repro.control.earlystop import _slope
+from repro.core.pipeline import ValidationResult
+from repro.core.reporting import CSVLogger
+from repro.core.validator import ValidationLedger
+from repro.core.watcher import CheckpointWatcher
+
+
+def _res(step, value, metric="m"):
+    return ValidationResult(step=step, metrics={metric: value},
+                            timings={"total_s": 0.01}, subset_size=1)
+
+
+# ---------------------------------------------------------------------------
+# Event log
+# ---------------------------------------------------------------------------
+
+def test_event_log_appends_persists_and_reloads(tmp_path):
+    path = str(tmp_path / "control.jsonl")
+    log = ControlEventLog(path)
+    log.emit("select", 10, value=0.5)
+    log.emit("gc", 10, deleted=[1, 2])
+    log.emit("stop", 20, reason="plateau")
+    # on-disk rows are valid JSON with dense seq ids
+    with open(path) as f:
+        rows = [json.loads(l) for l in f]
+    assert [r["seq"] for r in rows] == [0, 1, 2]
+    # restart: a fresh log continues the sequence
+    log2 = ControlEventLog(path)
+    assert len(log2) == 3
+    log2.emit("select", 30, value=0.6)
+    assert log2.events()[-1].seq == 3
+
+
+def test_event_log_decisions_renumbered_without_actuations():
+    log = ControlEventLog()
+    log.emit("select", 1, value=0.1)
+    log.emit("gc", 1, deleted=[])
+    log.emit("select", 2, value=0.2)
+    log.emit("stop", 2, reason="plateau")
+    dec = log.decisions()
+    assert [e.kind for e in dec] == ["select", "select", "stop"]
+    assert [e.seq for e in dec] == [0, 1, 2]   # dense despite the gc between
+
+
+# ---------------------------------------------------------------------------
+# CheckpointSelector
+# ---------------------------------------------------------------------------
+
+def test_selector_best_topk_and_tiebreak():
+    sel = CheckpointSelector(SelectionConfig(metric="m", top_k=2))
+    for s, v in [(10, 0.1), (20, 0.5), (30, 0.4), (40, 0.5)]:
+        sel.observe(s, {"m": v})
+    assert sel.best_step == 40                 # tie -> later (fresher) step
+    assert sel.top_steps() == [40, 20]
+    assert sel.ranking()[0] == (40, 0.5)
+
+
+def test_selector_min_mode():
+    sel = CheckpointSelector(SelectionConfig(metric="rank", mode="min",
+                                             top_k=2))
+    for s, v in [(1, 9.0), (2, 3.0), (3, 5.0)]:
+        sel.observe(s, {"rank": v})
+    assert sel.best_step == 2
+    assert sel.top_steps() == [2, 3]
+
+
+def test_selector_ema_smoothing_denoises_spike():
+    """A one-evaluation spike wins raw ranking but not the smoothed one."""
+    noisy = [(1, 0.50), (2, 0.52), (3, 0.90), (4, 0.60), (5, 0.62)]
+    raw = CheckpointSelector(SelectionConfig(metric="m", top_k=1))
+    smooth = CheckpointSelector(SelectionConfig(metric="m", top_k=1, ema=0.8))
+    for s, v in noisy:
+        raw.observe(s, {"m": v})
+        smooth.observe(s, {"m": v})
+    assert raw.best_step == 3                  # spike wins raw
+    assert smooth.best_step != 3               # smoothed ranking rejects it
+
+
+def test_selector_new_best_decisions():
+    sel = CheckpointSelector(SelectionConfig(metric="m", top_k=3))
+    d1 = sel.observe(1, {"m": 0.3})
+    d2 = sel.observe(2, {"m": 0.2})
+    d3 = sel.observe(3, {"m": 0.4})
+    assert d1["new_best"] and not d2["new_best"] and d3["new_best"]
+    assert d2["best_step"] == 1 and d3["best_step"] == 3
+
+
+def _toy_tree(seed):
+    return {"params": {"w": jnp.asarray(np.random.default_rng(seed)
+                                        .normal(size=(4,)), jnp.float32)},
+            "opt_state": {}}
+
+
+def test_selector_quality_aware_gc_keeps_topk_union_protect(tmp_path):
+    root = str(tmp_path / "ck")
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(root, s, _toy_tree(s))
+    sel = CheckpointSelector(SelectionConfig(metric="m", top_k=2))
+    for s, v in [(1, 0.9), (2, 0.1), (3, 0.8), (4, 0.2)]:
+        sel.observe(s, {"m": v})
+    # 5 is committed but unvalidated -> protected; 2, 4 lose on quality
+    deleted = sel.gc(root, protect={5})
+    assert sorted(deleted) == [2, 4]
+    assert ckpt.list_steps(root) == [1, 3, 5]
+    gc_events = [e for e in sel.events if e.kind == "gc"]
+    assert gc_events[-1].payload["kept"] == [1, 3, 5]
+
+
+def test_gc_checkpoints_keep_set_and_keep_last_modes(tmp_path):
+    root = str(tmp_path / "ck")
+    for s in (1, 2, 3, 4):
+        ckpt.save(root, s, _toy_tree(s))
+    # explicit keep set overrides recency entirely
+    deleted = ckpt.gc_checkpoints(root, keep={1, 4}, protect={2})
+    assert sorted(deleted) == [3]
+    assert ckpt.list_steps(root) == [1, 2, 4]
+    # keep_last window still works (backward compat)
+    assert ckpt.gc_checkpoints(root, keep_last=1) == [1, 2]
+
+
+def test_gc_keep_mode_spares_steps_newer_than_decision(tmp_path):
+    """TOCTOU guard: a checkpoint committed AFTER keep/protect were
+    computed (it is newer than every step the decision knew about) must
+    survive the sweep — it has no quality verdict yet."""
+    root = str(tmp_path / "ck")
+    for s in (1, 2, 3):
+        ckpt.save(root, s, _toy_tree(s))
+    keep, protect = {3}, {2}                   # decision snapshot: 1..3
+    ckpt.save(root, 4, _toy_tree(4))           # trainer commits concurrently
+    deleted = ckpt.gc_checkpoints(root, keep=keep, protect=protect)
+    assert deleted == [1]                      # 4 is past the horizon
+    assert ckpt.list_steps(root) == [2, 3, 4]
+    # an empty decision deletes nothing
+    assert ckpt.gc_checkpoints(root, keep=set()) == []
+
+
+# ---------------------------------------------------------------------------
+# EarlyStopController
+# ---------------------------------------------------------------------------
+
+def test_earlystop_patience_and_min_delta(tmp_path):
+    stop = str(tmp_path / "STOP")
+    es = EarlyStopController(EarlyStopConfig(metric="m", patience=2,
+                                             min_delta=0.05),
+                             stop_path=stop)
+    es.observe(1, {"m": 0.50})
+    es.observe(2, {"m": 0.52})                 # +0.02 < min_delta: bad eval
+    assert not es.stopped
+    es.observe(3, {"m": 0.53})                 # still within noise
+    assert es.stopped and es.reason == "plateau"
+    verdict = stop_requested(stop)
+    assert verdict["reason"] == "plateau" and verdict["best_step"] == 1
+    assert verdict["step"] == 3
+
+
+def test_earlystop_improvement_resets_patience():
+    es = EarlyStopController(EarlyStopConfig(metric="m", patience=2))
+    for s, v in [(1, 0.1), (2, 0.1), (3, 0.2), (4, 0.2)]:
+        es.observe(s, {"m": v})
+    assert not es.stopped                      # step 3 improved -> reset
+    es.observe(5, {"m": 0.2})
+    assert es.stopped
+
+
+def test_earlystop_min_mode():
+    es = EarlyStopController(EarlyStopConfig(metric="loss", mode="min",
+                                             patience=2))
+    for s, v in [(1, 1.0), (2, 0.5), (3, 0.6), (4, 0.7)]:
+        stop = es.observe(s, {"loss": v})
+    assert stop and es.best == 0.5 and es.best_step == 2
+
+
+def test_earlystop_overfit_detector_needs_train_feed():
+    cfg = EarlyStopConfig(metric="m", patience=10, overfit_window=3)
+    # val worsening + train improving -> overfit
+    es = EarlyStopController(cfg)
+    for s, v, t in [(1, 0.50, 1.0), (2, 0.49, 0.9), (3, 0.48, 0.8)]:
+        es.observe(s, {"m": v}, train_loss=t)
+    assert es.stopped and es.reason == "overfit"
+    # same val trend without train losses: gap undefined, no verdict
+    es2 = EarlyStopController(cfg)
+    for s, v in [(1, 0.50), (2, 0.49), (3, 0.48)]:
+        es2.observe(s, {"m": v})
+    assert not es2.stopped
+    # val worsening while train ALSO worsening is divergence, not overfit
+    es3 = EarlyStopController(cfg)
+    for s, v, t in [(1, 0.50, 0.8), (2, 0.49, 0.9), (3, 0.48, 1.0)]:
+        es3.observe(s, {"m": v}, train_loss=t)
+    assert not es3.stopped
+
+
+def test_earlystop_latched_after_stop():
+    es = EarlyStopController(EarlyStopConfig(metric="m", patience=1))
+    es.observe(1, {"m": 0.5})
+    es.observe(2, {"m": 0.4})
+    assert es.stopped
+    # drain-time rows cannot un-stop, and no second stop event is emitted
+    assert es.observe(3, {"m": 0.9}) is True
+    assert len([e for e in es.events if e.kind == "stop"]) == 1
+
+
+def test_slope_least_squares():
+    assert _slope([0.0, 1.0, 2.0]) == pytest.approx(1.0)
+    assert _slope([5.0, 5.0, 5.0]) == pytest.approx(0.0)
+    assert _slope([3.0, 2.0, 1.0]) == pytest.approx(-1.0)
+
+
+def test_stop_marker_atomic_write_and_poll(tmp_path):
+    path = str(tmp_path / "sub" / "STOP")
+    assert stop_requested(path) is None
+    write_stop_marker(path, {"reason": "plateau", "step": 7})
+    assert not os.path.exists(path + ".tmp")   # tmp renamed away
+    assert stop_requested(path)["step"] == 7
+
+
+def test_trainer_polls_stop_marker_between_steps(tmp_path):
+    """Training halts on the marker without finishing the step budget and
+    commits its final state."""
+    from repro.train import optim
+    from repro.train.trainer import Trainer, TrainerConfig
+    stop = str(tmp_path / "STOP")
+    ckdir = str(tmp_path / "ck")
+
+    def loss_fn(params, batch):
+        return jnp.mean(params["w"] ** 2), {}
+
+    marker_written = {}
+
+    def batches(step):
+        if step == 7 and not marker_written:
+            write_stop_marker(stop, {"reason": "test", "step": step})
+            marker_written["at"] = step
+        return {"x": jnp.zeros((1,), jnp.float32)}
+
+    cfg = TrainerConfig(total_steps=100, ckpt_every=50, log_every=50,
+                        ckpt_dir=ckdir, async_save=False, stop_file=stop)
+    tr = Trainer(cfg, loss_fn, optim.adamw(1e-2),
+                 {"w": jnp.ones((2,), jnp.float32)}, batches)
+    tr.run()
+    assert tr.stopped_early and tr.step == 8   # stopped before step 9
+    assert tr.stop_verdict["reason"] == "test"
+    assert ckpt.list_steps(ckdir) == [8]       # final state committed
+
+
+# ---------------------------------------------------------------------------
+# Ensembling
+# ---------------------------------------------------------------------------
+
+def test_average_params_weighted_and_dtype():
+    t1 = {"w": jnp.asarray([1.0, 2.0], jnp.float32)}
+    t2 = {"w": jnp.asarray([3.0, 4.0], jnp.float32)}
+    avg = average_params([t1, t2])
+    np.testing.assert_allclose(np.asarray(avg["w"]), [2.0, 3.0])
+    assert np.asarray(avg["w"]).dtype == np.float32
+    w = average_params([t1, t2], weights=[3.0, 1.0])
+    np.testing.assert_allclose(np.asarray(w["w"]), [1.5, 2.5])
+
+
+def test_uniform_soup_and_materialize_roundtrip(tmp_path):
+    root = str(tmp_path / "ck")
+    for s, fill in [(1, 1.0), (2, 3.0)]:
+        ckpt.save(root, s, {"params": {"w": jnp.full((3,), fill)},
+                            "opt_state": {}})
+    soup = uniform_soup(root, [1, 2])
+    np.testing.assert_allclose(np.asarray(soup["w"]), np.full((3,), 2.0))
+    vstep = materialize_virtual(root, soup, members=[1, 2])
+    assert vstep == 3                          # newest + 1
+    # indistinguishable downstream: committed, restorable, watcher-visible
+    state, extra = ckpt.restore(root, vstep)
+    np.testing.assert_allclose(np.asarray(state["params"]["w"]),
+                               np.asarray(soup["w"]))
+    assert extra["ensemble_of"] == [1, 2]
+    assert vstep in CheckpointWatcher(root).poll()
+
+
+def test_greedy_soup_never_scores_below_best_single(tmp_path):
+    """The greedy filter rejects a poisonous member; the soup's score is
+    >= the best single under the same score_fn."""
+    root = str(tmp_path / "ck")
+    target = np.asarray([1.0, 1.0, 1.0, 1.0])
+    fills = {1: [1.0, 1.0, 1.0, 0.8],          # best
+             2: [1.1, 0.9, 1.0, 0.9],          # helpful
+             3: [-5.0, 9.0, -4.0, 6.0]}        # poison
+    for s, w in fills.items():
+        ckpt.save(root, s, {"params": {"w": jnp.asarray(w, jnp.float32)},
+                            "opt_state": {}})
+
+    def score(params):
+        return -float(np.sum((np.asarray(params["w"]) - target) ** 2))
+
+    singles = {s: score({"w": np.asarray(w, np.float32)})
+               for s, w in fills.items()}
+    ranked = sorted(singles, key=lambda s: -singles[s])
+    params, members, sc = greedy_soup(root, ranked, score)
+    assert 3 not in members                    # poison rejected
+    assert sc >= max(singles.values())
+
+
+def test_trainer_resumes_past_virtual_checkpoint(tmp_path):
+    """A restarted trainer must resume from the newest TRAINED checkpoint,
+    not the ensemble soup (which has no optimizer state)."""
+    from repro.train import optim
+    from repro.train.trainer import Trainer, TrainerConfig
+    ckdir = str(tmp_path / "ck")
+
+    def loss_fn(params, batch):
+        return jnp.mean(params["w"] ** 2), {}
+
+    cfg = TrainerConfig(total_steps=10, ckpt_every=5, log_every=5,
+                        ckpt_dir=ckdir, async_save=False)
+    tr = Trainer(cfg, loss_fn, optim.adamw(1e-2),
+                 {"w": jnp.ones((2,), jnp.float32)}, lambda s: {})
+    tr.run()
+    soup = uniform_soup(ckdir, [5, 10])
+    vstep = materialize_virtual(ckdir, soup, members=[5, 10])
+    assert vstep == 11
+    tr2 = Trainer(TrainerConfig(total_steps=12, ckpt_every=5, log_every=5,
+                                ckpt_dir=ckdir, async_save=False),
+                  loss_fn, optim.adamw(1e-2),
+                  {"w": jnp.ones((2,), jnp.float32)}, lambda s: {})
+    assert tr2.step == 10                      # resumed past the soup
+    tr2.run()                                  # optimizer state intact
+    assert tr2.step == 12
+
+
+# ---------------------------------------------------------------------------
+# ControlPlane + offline replay
+# ---------------------------------------------------------------------------
+
+def test_plane_train_loss_lookup():
+    plane = ControlPlane(None, ControlConfig(metric="m"))
+    plane.note_train(10, {"loss": 1.0})
+    plane.note_train(20, {"loss": 0.5})
+    assert plane.train_loss_for(5) is None
+    assert plane.train_loss_for(10) == 1.0
+    assert plane.train_loss_for(15) == 1.0
+    assert plane.train_loss_for(25) == 0.5
+
+
+def test_plane_replay_reproduces_decisions():
+    cfg = ControlConfig(metric="m", early_stop=True, patience=2,
+                        min_delta=0.01, keep_top_k=2)
+    online = ControlPlane(None, cfg)
+    rows = []
+    for s, v in [(10, 0.2), (20, 0.5), (30, 0.5), (40, 0.5), (50, 0.5)]:
+        online.observe(s, {"m": v})
+        rows.append({"step": s, "metrics": {"m": v}})
+    assert online.stopped
+    offline = replay_ledger(rows, cfg)
+    assert offline.events.decisions() == online.events.decisions()
+    assert offline.stopped and offline.selector.best_step == \
+        online.selector.best_step
+
+
+def test_plane_ema_smooths_earlystop_too():
+    """--ema must de-noise the EARLY-STOP series, not just the ranking: a
+    raw spike resets patience, the smoothed one does not."""
+    series = [(1, 0.5), (2, 0.5), (3, 0.9), (4, 0.5), (5, 0.5)]
+    smooth = ControlPlane(None, ControlConfig(
+        metric="m", early_stop=True, patience=2, min_delta=0.05, ema=0.95))
+    raw = ControlPlane(None, ControlConfig(
+        metric="m", early_stop=True, patience=2, min_delta=0.05))
+    stopped_at = {}
+    for s, v in series:
+        for name, plane in (("smooth", smooth), ("raw", raw)):
+            plane.observe(s, {"m": v})
+            if plane.stopped and name not in stopped_at:
+                stopped_at[name] = s
+    assert stopped_at["smooth"] == 3           # spike damped: still plateau
+    assert stopped_at["raw"] == 5              # spike reset raw patience
+
+
+def test_plane_on_result_runs_gc_with_protection(tmp_path):
+    from repro.core.samplers import RunFileTopK  # noqa: F401 (import check)
+    root = str(tmp_path / "ck")
+    for s in (1, 2, 3):
+        ckpt.save(root, s, _toy_tree(s))
+
+    class FakeValidator:
+        def protect_set(self):
+            return {3}                          # 3 not validated yet
+
+    plane = ControlPlane(root, ControlConfig(metric="m", keep_top_k=1))
+    for s, v in [(1, 0.9), (2, 0.1)]:
+        plane.on_result(_res(s, v), FakeValidator())
+    assert ckpt.list_steps(root) == [1, 3]      # top-1 ∪ protected
+
+
+def test_plane_ensemble_skips_gc_deleted_members(tmp_path):
+    """Regression: with ensemble_top_k > keep_top_k the ranking tail is
+    already GC-deleted — the soup must only use checkpoints still on disk
+    instead of crashing on restore."""
+    root = str(tmp_path / "ck")
+    for s, fill in [(1, 1.0), (2, 2.0), (3, 4.0)]:
+        ckpt.save(root, s, {"params": {"w": jnp.full((2,), fill)},
+                            "opt_state": {}})
+    plane = ControlPlane(root, ControlConfig(metric="m", keep_top_k=2,
+                                             ensemble_top_k=3,
+                                             ensemble_greedy=False))
+    validated = set()
+
+    class V:                                   # real contract: committed
+        def protect_set(self):                 # minus validated stays safe
+            return set(ckpt.list_steps(root)) - validated
+
+    for s, v in [(1, 0.1), (2, 0.5), (3, 0.9)]:
+        validated.add(s)
+        plane.on_result(_res(s, v), V())
+    assert ckpt.list_steps(root) == [2, 3]     # rank tail (1) deleted
+    vstep = plane.build_ensemble(lambda p: 0.0)
+    assert vstep is not None
+    assert plane.ensemble_members == [3, 2]    # survivor set only
+    np.testing.assert_allclose(
+        np.asarray(ckpt.restore(root, vstep)[0]["params"]["w"]),
+        np.full((2,), 3.0))                    # mean of fills 2.0, 4.0
+
+
+def test_plane_rehydrate_protects_prior_best_across_restart(tmp_path):
+    """Restart data loss: a fresh selector must be warmed from the prior
+    session's ledger, or quality GC would delete the old best checkpoints
+    (idempotency means they are never re-validated)."""
+    root = str(tmp_path / "ck")
+    led_path = str(tmp_path / "ledger.jsonl")
+    led = ValidationLedger(led_path)
+    for s, v in [(10, 0.9), (20, 0.8)]:        # session 1: validated + kept
+        ckpt.save(root, s, _toy_tree(s))
+        led.record(_res(s, v))
+    # session 2: fresh process, new (worse) checkpoint arrives
+    led2 = ValidationLedger(led_path)
+    plane = ControlPlane(root, ControlConfig(metric="m", keep_top_k=2))
+    assert plane.rehydrate(led2.rows()) == 2
+    assert plane.selector.top_steps() == [10, 20]
+    ckpt.save(root, 30, _toy_tree(30))
+
+    class V:
+        def protect_set(self):
+            return set()                       # 30 validated below
+
+    plane.on_result(_res(30, 0.1), V())
+    assert ckpt.list_steps(root) == [10, 20]   # old best kept, loser GC'd
+
+
+def test_validate_step_bypasses_skipping_policy(tmp_path):
+    """A virtual (ensemble) checkpoint's step id is rarely on-stride: the
+    explicit validate_step path must score it anyway, ledger it, and not
+    leave it counted as policy-skipped."""
+    from repro.core.watcher import Policy
+    from test_watcher_policies import _toy_validator
+    root = str(tmp_path / "ck")
+    for s in (10, 20):
+        ckpt.save(root, s, _toy_tree(s))
+    v = _toy_validator(root, policy=Policy(kind="stride", stride=10))
+    v.validate_pending()
+    assert v.ledger.validated_steps == [10, 20]
+    ckpt.save(root, 21, _toy_tree(21))         # off-stride soup step
+    assert v.validate_pending() == 0           # policy would skip it...
+    assert 21 in v.watcher.skipped
+    assert v.validate_step(21) == 1            # ...explicit path scores it
+    assert 21 in v.ledger.validated_steps
+    assert 21 not in v.watcher.skipped         # claimed, not skipped
+    assert v.validate_step(21) == 0            # still ledger-idempotent
+
+
+def test_plane_ensemble_disabled_paths(tmp_path):
+    plane = ControlPlane(str(tmp_path), ControlConfig(metric="m"))
+    assert plane.build_ensemble(lambda p: 0.0) is None   # top_k = 0
+    plane2 = ControlPlane(str(tmp_path),
+                          ControlConfig(metric="m", ensemble_top_k=2))
+    plane2.observe(1, {"m": 0.5})
+    assert plane2.build_ensemble(lambda p: 0.0) is None  # < 2 members
+
+
+# ---------------------------------------------------------------------------
+# Satellite: ValidationLedger concurrency safety
+# ---------------------------------------------------------------------------
+
+def test_ledger_concurrent_records_and_reads(tmp_path):
+    path = str(tmp_path / "ledger.jsonl")
+    led = ValidationLedger(path)
+    n_threads, per_thread = 8, 25
+    errors = []
+
+    def writer(base):
+        try:
+            for i in range(per_thread):
+                led.record(_res(base * 1000 + i, 0.5))
+        except Exception as e:                  # pragma: no cover
+            errors.append(e)
+
+    def reader():
+        try:
+            for _ in range(50):
+                for row in led.rows():          # snapshot: no mutation races
+                    assert "step" in row and "metrics" in row
+        except Exception as e:                  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(t,))
+               for t in range(n_threads)] + \
+              [threading.Thread(target=reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert len(led.rows()) == n_threads * per_thread
+    # every persisted line is a complete row (no torn appends)
+    with open(path) as f:
+        lines = [json.loads(l) for l in f if l.strip()]
+    assert len(lines) == n_threads * per_thread
+    # a restarted ledger sees the identical row set
+    led2 = ValidationLedger(path)
+    assert led2.validated_steps == led.validated_steps
+
+
+def test_ledger_rows_preserve_record_order(tmp_path):
+    """Replay fidelity: rows() is RECORD order (decision order), even when
+    steps complete out of numeric order."""
+    led = ValidationLedger(str(tmp_path / "l.jsonl"))
+    for s in (30, 10, 20):
+        led.record(_res(s, 0.1))
+    assert [r["step"] for r in led.rows()] == [30, 10, 20]
+    assert led.validated_steps == [10, 20, 30]
+
+
+# ---------------------------------------------------------------------------
+# Satellite: CSVLogger restart data loss
+# ---------------------------------------------------------------------------
+
+def test_csvlogger_restart_appends_instead_of_truncating(tmp_path):
+    """Regression: a fresh process's first log() used to open the CSV with
+    mode "w" (fields unknown), wiping the history the control plane now
+    consumes."""
+    path = str(tmp_path / "m.csv")
+    lg1 = CSVLogger(path)
+    lg1.log(1, {"mrr": 0.1})
+    lg1.log(2, {"mrr": 0.2})
+    # fresh process, same fields -> plain append
+    lg2 = CSVLogger(path)
+    lg2.log(3, {"mrr": 0.3})
+    import csv as _csv
+    with open(path) as f:
+        rows = list(_csv.DictReader(f))
+    assert [r["step"] for r in rows] == ["1", "2", "3"]
+    # fresh process, NEW field -> header widens, history preserved
+    lg3 = CSVLogger(path)
+    lg3.log(4, {"mrr": 0.4, "recall": 0.9})
+    with open(path) as f:
+        rows = list(_csv.DictReader(f))
+    assert [r["step"] for r in rows] == ["1", "2", "3", "4"]
+    assert rows[0]["mrr"] == "0.1" and rows[3]["recall"] == "0.9"

@@ -1,0 +1,229 @@
+"""End-to-end convergence control: trainer + async validator + control plane.
+
+The acceptance scenario for the control subsystem, on synthetic data:
+
+  * training runs with a generous step budget and NEVER blocks on
+    validation; the async validator feeds every ledger row to the control
+    plane;
+  * the plateau detector publishes an atomic STOP marker; the trainer polls
+    it between steps and halts early;
+  * quality-aware GC leaves exactly top-k ∪ protected checkpoints on disk;
+  * the greedy checkpoint soup materializes a virtual checkpoint that
+    re-validates (through the ordinary watcher/validator path) at least as
+    well as the best single checkpoint;
+  * replaying the validation ledger offline reproduces the identical
+    decision sequence (determinism).
+"""
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+from repro.control import ControlConfig, ControlPlane, replay_ledger, \
+    stop_requested
+from repro.control.ensemble import VIRTUAL_KEY
+from repro.core.pipeline import ValidationConfig, ValidationPipeline
+from repro.core.samplers import RunFileTopK
+from repro.core.validator import AsyncValidator
+from repro.data import corpus as synthetic_ds
+from repro.models.biencoder import EncoderSpec
+from repro.train import optim
+from repro.train.trainer import Trainer, TrainerConfig
+
+DIM, VOCAB = 16, 211
+
+
+def _toy_encode(params, tokens, mask):
+    table = params["table"]
+    emb = jnp.take(table, tokens, axis=0)
+    m = mask.astype(emb.dtype)[..., None]
+    v = (emb * m).sum(1) / jnp.clip(m.sum(1), 1e-6)
+    return v / jnp.clip(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-6)
+
+
+def toy_spec():
+    return EncoderSpec(
+        name="toy", dim=DIM, encode_query=_toy_encode,
+        encode_passage=_toy_encode,
+        init=lambda rng: {"table": jax.random.normal(rng, (VOCAB, DIM))},
+        q_max_len=10, p_max_len=26)
+
+
+def test_control_plane_end_to_end(tmp_path):
+    workdir = str(tmp_path)
+    root = os.path.join(workdir, "ck")
+    stop_path = os.path.join(workdir, "STOP")
+
+    spec = toy_spec()
+    ds = synthetic_ds.synthetic_retrieval_dataset(0, n_passages=120,
+                                                  n_queries=16, vocab=VOCAB)
+    baseline = synthetic_ds.lexical_baseline_run(ds, k=30)
+    pipe = ValidationPipeline(
+        spec, ds.corpus, ds.queries, ds.qrels,
+        ValidationConfig(metrics=("MRR@10",), k=20, batch_size=32),
+        sampler=RunFileTopK(depth=5), baseline_run=baseline)
+
+    cfg = ControlConfig(metric="MRR@10", early_stop=True, patience=3,
+                        min_delta=1e-6, keep_top_k=2, ensemble_top_k=2)
+    plane = ControlPlane(root, cfg, stop_path=stop_path,
+                         event_path=os.path.join(workdir, "control.jsonl"))
+    validator = AsyncValidator(
+        root, pipe, controller=plane, poll_interval_s=0.01,
+        ledger_path=os.path.join(workdir, "ledger.jsonl"))
+
+    # training converges to a fixed target table, so the validation metric
+    # provably plateaus: loss = ||table - T||^2 (a quadratic the optimizer
+    # drives to zero while MRR freezes once the ranking stabilizes).
+    target = spec.init(jax.random.PRNGKey(7))["table"]
+
+    def loss_fn(params, batch):
+        d = params["table"] - target
+        return jnp.mean(d * d), {}
+
+    def batch_iter(step):
+        time.sleep(0.004)      # a realistic per-step cost so checkpoints
+        return {}              # outpace validation without racing the test
+
+    total_budget = 3000
+    tcfg = TrainerConfig(total_steps=total_budget, ckpt_every=20,
+                         log_every=20, ckpt_dir=root, stop_file=stop_path)
+    trainer = Trainer(tcfg, loss_fn, optim.adamw(0.1, weight_decay=0.0),
+                      {"table": spec.init(jax.random.PRNGKey(0))["table"]},
+                      batch_iter)
+
+    train_history = []
+
+    def on_metrics(step, m):
+        train_history.append((step, m["loss"]))
+        plane.note_train(step, m)
+
+    validator.start()
+    t0 = time.time()
+    trainer.run(on_metrics=on_metrics)
+    train_wall = time.time() - t0
+    validator.stop(drain=True)           # validate whatever is committed
+    assert not validator.errors
+
+    # -- asynchronous early stop --------------------------------------------
+    assert trainer.stopped_early, "plateau never detected"
+    assert trainer.step < total_budget   # halted early, not on the budget
+    verdict = stop_requested(stop_path)
+    assert verdict is not None and verdict["reason"] == "plateau"
+    assert trainer.stop_verdict["reason"] == "plateau"
+    # training never blocks on validation: wall time is training-shaped
+    # (steps x per-step cost), not training + validation backlog.  Generous
+    # 4x bound — a blocking design would show the full validation series.
+    assert train_wall < 4.0 * (trainer.step * 0.004 + 2.0)
+
+    # -- quality-aware GC: exactly top-k ∪ protected ------------------------
+    # after the drain everything committed is validated, so protected = ∅
+    assert plane.cfg.keep_top_k == 2
+    expected_keep = plane.selector.keep_set(protect=validator.protect_set(),
+                                            k=2)
+    assert set(ckpt.list_steps(root)) == expected_keep
+    assert len(expected_keep) == 2
+
+    # -- ensemble: soup >= best single, via the NORMAL validation path ------
+    best_single = plane.selector.best_value
+    best_single_step = plane.selector.best_step
+    vstep = plane.build_ensemble(
+        lambda p: pipe.validate_params(p).metrics["MRR@10"])
+    assert vstep is not None
+    _, extra = ckpt.restore(root, vstep)
+    assert extra[VIRTUAL_KEY] == plane.ensemble_members
+    n = validator.validate_pending()     # watcher discovers the soup ckpt
+    assert n == 1
+    soup_row = validator.ledger.rows()[-1]
+    assert soup_row["step"] == vstep
+    assert soup_row["metrics"]["MRR@10"] >= best_single - 1e-12, \
+        f"soup {soup_row['metrics']} < best single {best_single} " \
+        f"(step {best_single_step})"
+
+    # -- determinism: offline replay reproduces every decision --------------
+    offline = replay_ledger(validator.ledger.rows(), cfg,
+                            train_history=train_history)
+    assert offline.events.decisions() == plane.events.decisions()
+    assert offline.stopped and offline.earlystop.reason == "plateau"
+    assert offline.selector.top_steps() == plane.selector.top_steps()
+    # and the persisted event log round-trips
+    with open(os.path.join(workdir, "control.jsonl")) as f:
+        kinds = [json.loads(l)["kind"] for l in f if l.strip()]
+    assert "stop" in kinds and "gc" in kinds and "ensemble" in kinds
+
+
+def test_stale_stop_marker_cleared_on_new_run(tmp_path):
+    """A STOP verdict belongs to one run: a restarted/continued run in the
+    same workdir must clear it and train, not halt at step 0."""
+    from repro.control.earlystop import write_stop_marker
+    from repro.launch.train import run
+
+    class Args:
+        arch = "dr-bert-base"
+        workdir = str(tmp_path / "run")
+        steps = 8
+        ckpt_every = 8
+        batch_size = 8
+        corpus_size = 80
+        n_queries = 12
+        q_max_len = 10
+        p_max_len = 26
+        depth = 10
+        lr = 2e-3
+        seed = 0
+        subset = True
+        sync = False
+        full = False
+        early_stop_patience = 3            # control plane armed
+
+    os.makedirs(Args.workdir, exist_ok=True)
+    write_stop_marker(os.path.join(Args.workdir, "STOP"),
+                      {"reason": "plateau", "step": 999})   # stale verdict
+    res = run(Args())
+    assert not res["stopped_early"]        # trained through the budget
+    assert res["validated_steps"] == [8]
+
+
+def test_sync_mode_control_plane_still_works(tmp_path):
+    """Fig. 1a (inline validation) composes with the control plane too: the
+    same plateau stops training via the same marker, synchronously."""
+    workdir = str(tmp_path)
+    root = os.path.join(workdir, "ck")
+    stop_path = os.path.join(workdir, "STOP")
+    spec = toy_spec()
+    ds = synthetic_ds.synthetic_retrieval_dataset(1, n_passages=80,
+                                                  n_queries=12, vocab=VOCAB)
+    baseline = synthetic_ds.lexical_baseline_run(ds, k=20)
+    pipe = ValidationPipeline(
+        spec, ds.corpus, ds.queries, ds.qrels,
+        ValidationConfig(metrics=("MRR@10",), k=10, batch_size=32),
+        sampler=RunFileTopK(depth=5), baseline_run=baseline)
+    plane = ControlPlane(root, ControlConfig(metric="MRR@10",
+                                             early_stop=True, patience=2,
+                                             min_delta=1e-6),
+                         stop_path=stop_path)
+    validator = AsyncValidator(root, pipe, controller=plane)
+    target = spec.init(jax.random.PRNGKey(3))["table"]
+
+    def loss_fn(params, batch):
+        d = params["table"] - target
+        return jnp.mean(d * d), {}
+
+    tcfg = TrainerConfig(total_steps=2000, ckpt_every=20, log_every=20,
+                         ckpt_dir=root, stop_file=stop_path,
+                         async_save=False)
+    trainer = Trainer(tcfg, loss_fn, optim.adamw(0.1, weight_decay=0.0),
+                      {"table": spec.init(jax.random.PRNGKey(1))["table"]},
+                      lambda step: {})
+
+    def on_metrics(step, m):
+        plane.note_train(step, m)
+        validator.validate_pending()     # paper Fig. 1a: inline validation
+
+    trainer.run(on_metrics=on_metrics)
+    assert trainer.stopped_early and trainer.step < 2000
+    assert plane.earlystop.reason == "plateau"
