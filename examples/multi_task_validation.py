@@ -1,0 +1,105 @@
+"""Multi-task validation — several validation sets, one checkpoint pass.
+
+"Bridging the Training-Inference Gap for Dense Phrase Retrieval" (Cho et
+al. 2022) validates checkpoints against *multiple* efficient validation
+sets and picks the checkpoint that transfers.  The ValidationSuite is that
+protocol on Asyncval's asynchronous loop:
+
+  * two tasks ("dev" and "heldout" query splits) over the SAME corpus —
+    the suite pads the corpus TokenStore exactly ONCE and both engines
+    stream it (``suite.store_builds == 1``);
+  * the async validator writes one ledger row per (step, task);
+  * the control plane selects and early-stops on a composite metric spec:
+    the weighted aggregate ``0.5*dev:MRR@10 + 0.5*heldout:MRR@10``.
+
+    PYTHONPATH=src python examples/multi_task_validation.py
+"""
+
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import toy_spec, train_toy_dr
+from repro.ckpt import checkpoint as ckpt
+from repro.control import ControlConfig, ControlPlane
+from repro.core.suite import (ValidationConfig, ValidationSuite,
+                              ValidationTask)
+from repro.core.validator import AsyncValidator
+from repro.data import corpus as corpus_lib
+
+
+def split_queries(ds, frac=0.5):
+    """Two disjoint (queries, qrels) splits over one corpus."""
+    qids = sorted(ds.queries)
+    cut = int(len(qids) * frac)
+    mk = lambda ids: ({q: ds.queries[q] for q in ids},
+                      {q: ds.qrels[q] for q in ids if q in ds.qrels})
+    return mk(qids[:cut]), mk(qids[cut:])
+
+
+def main():
+    workdir = tempfile.mkdtemp(prefix="asyncval_multitask_")
+    print(f"[multi-task] workdir: {workdir}")
+
+    ds = corpus_lib.synthetic_retrieval_dataset(0, n_passages=900,
+                                                n_queries=80)
+    (dev_q, dev_qrels), (ho_q, ho_qrels) = split_queries(ds)
+
+    # -- train, committing checkpoints --------------------------------------
+    spec = toy_spec(ds.vocab)
+    ckdir = os.path.join(workdir, "ckpts")
+    _, snapshots = train_toy_dr(ds, spec, steps=80, snapshot_every=10)
+    for step, params in snapshots:
+        ckpt.save(ckdir, step, {"params": params})
+
+    # -- the suite: two tasks, one shared corpus store ----------------------
+    suite = ValidationSuite(spec, [
+        ValidationTask("dev", ds.corpus, dev_q, dev_qrels,
+                       metrics=("MRR@10", "Recall@100"), k=100),
+        ValidationTask("heldout", ds.corpus, ho_q, ho_qrels,
+                       metrics=("MRR@10",), k=100),
+    ], ValidationConfig(batch_size=128, chunk_size=128))
+    suite.engine("dev"), suite.engine("heldout")    # build both engines
+    assert suite.store_builds == 1, "same corpus -> ONE TokenStore build"
+    print(f"[multi-task] 2 tasks share {suite.store_builds} corpus "
+          f"TokenStore ({suite.engine('dev').doc_store.n_chunks} chunks)")
+
+    # -- control plane on a composite metric spec ---------------------------
+    cmetric = "0.5*dev:MRR@10 + 0.5*heldout:MRR@10"
+    control = ControlPlane(
+        ckdir,
+        ControlConfig(metric=cmetric, mode="max", keep_top_k=3,
+                      early_stop=True, patience=3),
+        stop_path=os.path.join(workdir, "STOP"),
+        event_path=os.path.join(workdir, "control.jsonl"))
+
+    validator = AsyncValidator(
+        ckdir, suite, controller=control,
+        ledger_path=os.path.join(workdir, "ledger.jsonl"))
+    n = validator.validate_pending()
+
+    print(f"[multi-task] validated {n} checkpoints x "
+          f"{len(suite.task_names)} tasks:")
+    for r in validator.results:
+        agg = 0.5 * r.metrics["dev:MRR@10"] + 0.5 * r.metrics["heldout:MRR@10"]
+        print(f"  step {r.step:>4}: dev={r.metrics['dev:MRR@10']:.4f} "
+              f"heldout={r.metrics['heldout:MRR@10']:.4f} "
+              f"composite={agg:.4f}")
+    print(f"[multi-task] ledger rows are keyed (step, task): "
+          f"{[(row['step'], row['task']) for row in validator.ledger.rows()][:4]} ...")
+    print(f"[multi-task] best step by composite spec: "
+          f"{control.selector.best_step} "
+          f"(value {control.selector.best_value:.4f})")
+    if control.stopped:
+        print(f"[multi-task] early stop published: "
+              f"{control.earlystop.reason} at step "
+              f"{control.earlystop.stop_step}")
+    assert all(len(validator.ledger.tasks_for(s)) == 2
+               for s in validator.ledger.validated_steps)
+
+
+if __name__ == "__main__":
+    main()

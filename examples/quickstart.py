@@ -23,9 +23,10 @@ import jax
 from benchmarks.common import toy_spec, train_toy_dr
 from repro.ckpt import checkpoint as ckpt
 from repro.core.metrics import read_trec_qrels
-from repro.core.pipeline import ValidationConfig, ValidationPipeline
 from repro.core.reporting import CSVLogger
 from repro.core.samplers import RunFileTopK, write_subset_jsonl
+from repro.core.suite import (ValidationConfig, ValidationSuite,
+                              ValidationTask)
 from repro.core.validator import AsyncValidator
 from repro.data import corpus as corpus_lib
 
@@ -63,25 +64,30 @@ def main():
         ckpt.save(ckdir, step, {"params": params})
 
     # -- 4. the closed loop: watch -> stream encode→top-k -> report --------
-    # The default engine="streaming" fuses corpus encoding with the running
-    # top-k on device, chunk by chunk: the (N, D) embedding matrix is never
+    # The public API is the ValidationSuite: a list of ValidationTasks (one
+    # here — add more to validate several query sets / corpora per
+    # checkpoint in one pass, sharing TokenStores).  The default
+    # engine="streaming" fuses corpus encoding with the running top-k on
+    # device, chunk by chunk: the (N, D) embedding matrix is never
     # materialized, so the corpus can outgrow host RAM.  chunk_size sets the
     # streaming granularity (defaults to batch_size).
     corpus = corpus_lib.read_jsonl(corpus_path)       # round-trip the files
     queries = corpus_lib.read_jsonl(query_path)
     qrels = read_trec_qrels(qrel_path)
-    pipe = ValidationPipeline(
-        spec, corpus, queries, qrels,
-        ValidationConfig(metrics=("MRR@10", "Recall@100"), k=100,
-                         batch_size=128, engine="streaming", chunk_size=128,
-                         write_run=True,
-                         output_dir=os.path.join(workdir, "runs")),
-        sampler=RunFileTopK(depth=20), baseline_run=baseline)
-    print(f"[quickstart] engine: {pipe.engine.name} "
-          f"({pipe.engine.doc_store.n_chunks} corpus chunks of "
-          f"{pipe.engine.doc_store.chunk})")
+    suite = ValidationSuite(spec, [
+        ValidationTask("default", corpus, queries, qrels,
+                       sampler=RunFileTopK(depth=20), baseline_run=baseline,
+                       metrics=("MRR@10", "Recall@100"), k=100),
+    ], ValidationConfig(metrics=("MRR@10", "Recall@100"), k=100,
+                        batch_size=128, engine="streaming", chunk_size=128,
+                        write_run=True,
+                        output_dir=os.path.join(workdir, "runs")))
+    engine = suite.engine("default")
+    print(f"[quickstart] engine: {engine.name} "
+          f"({engine.doc_store.n_chunks} corpus chunks of "
+          f"{engine.doc_store.chunk})")
     validator = AsyncValidator(
-        ckdir, pipe, logger=CSVLogger(os.path.join(workdir, "metrics.csv")),
+        ckdir, suite, logger=CSVLogger(os.path.join(workdir, "metrics.csv")),
         ledger_path=os.path.join(workdir, "ledger.jsonl"))
     n = validator.validate_pending()
 

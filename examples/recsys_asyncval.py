@@ -26,7 +26,8 @@ import numpy as np
 
 from repro.ckpt import checkpoint as ckpt
 from repro.configs import registry
-from repro.core.pipeline import ValidationConfig, ValidationPipeline
+from repro.core.suite import (ValidationConfig, ValidationSuite,
+                              ValidationTask)
 from repro.core.validator import AsyncValidator
 from repro.models import nn
 from repro.models import recsys as rcs
@@ -100,11 +101,12 @@ def main():
                        encode_passage=encode_items,
                        init=lambda rng: rcs.init(rng, cfg),
                        q_max_len=SEQ, p_max_len=1)
-    pipe = ValidationPipeline(
-        spec, corpus, queries, qrels,
-        ValidationConfig(metrics=("MRR@10", "Recall@100"), k=100,
-                         batch_size=64))
-    validator = AsyncValidator(ckdir, pipe, poll_interval_s=0.05)
+    suite = ValidationSuite(spec, [
+        ValidationTask("default", corpus, queries, qrels,
+                       metrics=("MRR@10", "Recall@100"), k=100),
+    ], ValidationConfig(metrics=("MRR@10", "Recall@100"), k=100,
+                        batch_size=64))
+    validator = AsyncValidator(ckdir, suite, poll_interval_s=0.05)
 
     validator.start()
     trainer.run()

@@ -14,6 +14,7 @@ from repro.control.ensemble import (average_params, greedy_soup,
                                     materialize_virtual, uniform_soup)
 from repro.control.events import (ACTUATION_KINDS, DECISION_KINDS,
                                   ControlEvent, ControlEventLog)
+from repro.control.metricspec import MetricSpec, flatten_rows, metric_mode
 from repro.control.plane import ControlConfig, ControlPlane, replay_ledger
 from repro.control.selection import CheckpointSelector, SelectionConfig
 
@@ -24,4 +25,5 @@ __all__ = [
     "write_stop_marker",
     "average_params", "greedy_soup", "materialize_virtual", "uniform_soup",
     "ControlConfig", "ControlPlane", "replay_ledger",
+    "MetricSpec", "flatten_rows", "metric_mode",
 ]

@@ -30,13 +30,15 @@ import os
 from typing import Dict, List, Optional, Tuple
 
 from repro.control.events import ControlEventLog
+from repro.control.metricspec import MetricSpec
 
 STOP_MARKER = "STOP"
 
 
 @dataclasses.dataclass(frozen=True)
 class EarlyStopConfig:
-    metric: str = "MRR@10"
+    metric: str = "MRR@10"         # a composite spec: "m", "task:m", or a
+                                   # weighted "w1*task:m + ..." aggregate
     mode: str = "max"              # max | min (is bigger better?)
     patience: int = 3              # evaluations without improvement
     min_delta: float = 0.0         # improvement below this is noise
@@ -50,6 +52,7 @@ class EarlyStopConfig:
             raise ValueError("patience must be >= 1")
         if self.overfit_window == 1 or self.overfit_window == 2:
             raise ValueError("overfit_window needs >= 3 points for a trend")
+        MetricSpec.parse(self.metric)          # fail fast on a bad spec
 
 
 def _slope(ys: List[float]) -> float:
@@ -89,6 +92,7 @@ class EarlyStopController:
                  stop_path: Optional[str] = None,
                  event_log: Optional[ControlEventLog] = None):
         self.cfg = cfg
+        self.spec = MetricSpec.parse(cfg.metric)
         self.stop_path = stop_path
         self.events = event_log if event_log is not None else ControlEventLog()
         self.best: Optional[float] = None
@@ -128,7 +132,7 @@ class EarlyStopController:
     def observe(self, step: int, metrics: Dict[str, float],
                 train_loss: Optional[float] = None) -> bool:
         """Fold one validation row in; returns the (latched) stop verdict."""
-        value = float(metrics[self.cfg.metric])
+        value = self.spec.value(metrics)
         self._history.append((step, value,
                               None if train_loss is None
                               else float(train_loss)))

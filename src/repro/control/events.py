@@ -54,16 +54,20 @@ class ControlEventLog:
         self.path = path
         self._events: List[ControlEvent] = []
         self._lock = threading.Lock()
+        self._torn_offset = None
         if path and os.path.exists(path):
-            with open(path) as f:
-                for line in f:
-                    if line.strip():
-                        rec = json.loads(line)
-                        seq, kind, step = (rec.pop("seq"), rec.pop("kind"),
-                                           rec.pop("step"))
-                        self._events.append(ControlEvent(
-                            seq=int(seq), kind=kind, step=int(step),
-                            payload=rec))
+            # same crash discipline as ValidationLedger: a torn FINAL line
+            # (emit died mid-write) is dropped on load and truncated by the
+            # owning writer just before its next emit — loading never
+            # mutates the file; interior corruption raises.
+            from repro.core.jsonl import read_jsonl_tolerant
+            recs, self._torn_offset = read_jsonl_tolerant(
+                path, kind="control event")
+            for rec in recs:
+                seq, kind, step = (rec.pop("seq"), rec.pop("kind"),
+                                   rec.pop("step"))
+                self._events.append(ControlEvent(
+                    seq=int(seq), kind=kind, step=int(step), payload=rec))
 
     def emit(self, kind: str, step: int, **payload) -> ControlEvent:
         with self._lock:
@@ -71,6 +75,10 @@ class ControlEventLog:
                               step=int(step), payload=payload)
             self._events.append(ev)
             if self.path:
+                if self._torn_offset is not None:   # writer-side repair
+                    from repro.core.jsonl import truncate_torn_tail
+                    truncate_torn_tail(self.path, self._torn_offset)
+                    self._torn_offset = None
                 with open(self.path, "a") as f:
                     f.write(ev.to_json() + "\n")
                     f.flush()

@@ -33,12 +33,15 @@ from repro.control.earlystop import EarlyStopConfig, EarlyStopController
 from repro.control.ensemble import greedy_soup, materialize_virtual, \
     uniform_soup
 from repro.control.events import ControlEvent, ControlEventLog
+from repro.control.metricspec import MetricSpec, flatten_rows
 from repro.control.selection import CheckpointSelector, SelectionConfig
 
 
 @dataclasses.dataclass(frozen=True)
 class ControlConfig:
-    metric: str = "MRR@10"
+    metric: str = "MRR@10"         # a composite spec: "m", "task:m", or a
+                                   # weighted "w1*task:m + ..." aggregate
+                                   # over a multi-task suite's flat metrics
     mode: str = "max"              # max | min (is bigger better?)
     keep_top_k: int = 0            # 0 = quality-aware GC disabled
     ema: float = 0.0               # selection smoothing (0 = off)
@@ -115,19 +118,31 @@ class ControlPlane:
     def stopped(self) -> bool:
         return self.earlystop is not None and self.earlystop.stopped
 
-    def rehydrate(self, rows) -> int:
+    def rehydrate(self, rows, expected_tasks=None) -> int:
         """Warm the selector's ranking from a previous session's
         validation-ledger rows (``ValidationLedger.rows()``).
+        ``expected_tasks`` (the suite's task names) drops partially-recorded
+        steps — rows a crash left incomplete — which the online controller
+        never observed and which will re-validate in full.
 
         Restart safety for quality-aware GC: the ledger makes validation
         idempotent (old steps are never re-validated), so without this a
         fresh selector would rank only the new session's steps and GC the
-        previous session's best checkpoints.  Early stopping is NOT
+        previous session's best checkpoints.  Per-task (schema-v2) rows are
+        grouped back into per-step observations.  Early stopping is NOT
         rehydrated — a stop verdict must come from evidence this session
         gathers (a continued run deliberately gets fresh patience)."""
         n = 0
-        for row in rows:
-            self.selector.observe(int(row["step"]), row["metrics"])
+        for step, flat in flatten_rows(rows, expected_tasks):
+            try:
+                self.selector.observe(step, flat)
+            except KeyError:
+                # without expected_tasks a partially-recorded step can
+                # still surface here, missing the metric the spec needs;
+                # online, the controller never saw it — the validator will
+                # re-validate and re-observe it, so skip rather than
+                # poison startup.
+                continue
             n += 1
         return n
 
@@ -173,18 +188,24 @@ class ControlPlane:
         return vstep
 
 
-def replay_ledger(rows, cfg: ControlConfig, *,
-                  train_history=None) -> ControlPlane:
+def replay_ledger(rows, cfg: ControlConfig, *, train_history=None,
+                  expected_tasks=None) -> ControlPlane:
     """Offline replay: re-derive the decision sequence from validation-ledger
     rows (``ValidationLedger.rows()``, insertion order).
 
     Returns a plane whose ``events.decisions()`` is identical to the online
     run's — no filesystem access, no markers, no deletions.
     ``train_history``: optional ``[(step, loss), ...]`` feed for the overfit
-    detector (the trainer's logged losses)."""
+    detector (the trainer's logged losses).  ``expected_tasks``: the suite's
+    task names, to drop crash-torn partial steps the online controller
+    never observed."""
     plane = ControlPlane(None, cfg, stop_path=None, event_path=None)
     for step, loss in (train_history or []):
         plane.note_train(step, {"loss": loss})
-    for row in rows:
-        plane.observe(int(row["step"]), row["metrics"])
+    for step, flat in flatten_rows(rows, expected_tasks):
+        try:
+            plane.observe(step, flat)
+        except KeyError:
+            continue          # partial step (crash between task rows): the
+            #                   online controller never observed it either
     return plane

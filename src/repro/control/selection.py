@@ -20,11 +20,13 @@ from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 from repro.ckpt import checkpoint as ckpt
 from repro.control.events import ControlEventLog
+from repro.control.metricspec import MetricSpec
 
 
 @dataclasses.dataclass(frozen=True)
 class SelectionConfig:
-    metric: str = "MRR@10"
+    metric: str = "MRR@10"       # a composite spec: "m", "task:m", or a
+                                 # weighted "w1*task:m + w2*task2:m" sum
     mode: str = "max"            # max | min (is bigger better?)
     top_k: int = 3               # ranking depth (also the GC keep budget)
     ema: float = 0.0             # 0 disables; else s_t = ema*s_{t-1} + (1-ema)*x_t
@@ -34,12 +36,14 @@ class SelectionConfig:
             raise ValueError(f"mode must be max|min, got {self.mode!r}")
         if not (0.0 <= self.ema < 1.0):
             raise ValueError(f"ema must be in [0, 1), got {self.ema}")
+        MetricSpec.parse(self.metric)         # fail fast on a bad spec
 
 
 class CheckpointSelector:
     def __init__(self, cfg: SelectionConfig,
                  event_log: Optional[ControlEventLog] = None):
         self.cfg = cfg
+        self.spec = MetricSpec.parse(cfg.metric)
         self.events = event_log if event_log is not None else ControlEventLog()
         self._raw: Dict[int, float] = {}
         self._value: Dict[int, float] = {}    # smoothed (== raw when ema=0)
@@ -77,7 +81,7 @@ class CheckpointSelector:
         """Fold one validation row in (observation order = smoothing order).
 
         Returns the decision record; also emitted as a ``select`` event."""
-        x = float(metrics[self.cfg.metric])
+        x = self.spec.value(metrics)
         self._raw[step] = x
         if self.cfg.ema > 0.0:
             prev = self._ema_state if self._ema_state is not None else x
@@ -95,10 +99,21 @@ class CheckpointSelector:
         self.events.emit("select", step, **decision)
         return decision
 
-    def observe_rows(self, rows: Iterable[dict]) -> None:
-        """Replay validation-ledger rows (``ValidationLedger.rows()``)."""
-        for row in rows:
-            self.observe(int(row["step"]), row["metrics"])
+    def observe_rows(self, rows: Iterable[dict],
+                     expected_tasks=None) -> None:
+        """Replay validation-ledger rows (``ValidationLedger.rows()``) —
+        per-task rows are grouped back into per-step observations.  A
+        partially-recorded step (crash between a suite's task rows) is
+        skipped — dropped outright when ``expected_tasks`` is given, else
+        when it lacks the metrics the spec needs — exactly as the online
+        controller never observed it (same discipline as
+        ``ControlPlane.rehydrate`` / ``replay_ledger``)."""
+        from repro.control.metricspec import flatten_rows
+        for step, flat in flatten_rows(rows, expected_tasks):
+            try:
+                self.observe(step, flat)
+            except KeyError:
+                continue
 
     # -- quality-aware retention --------------------------------------------
     def keep_set(self, protect: Iterable[int] = (),

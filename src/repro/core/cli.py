@@ -34,19 +34,31 @@ import sys
 import time
 from typing import Optional
 
+from repro.core.registry import (ENCODERS, ENGINES, IMPLS, MODES, SAMPLERS,
+                                 ensure_builtins, register_encoder)
 
-def build_encoder(args):
-    if args.encoder:
-        mod_name, fn_name = args.encoder.split(":")
-        fn = getattr(importlib.import_module(mod_name), fn_name)
-        return fn(args)
-    # default: registry arch wrapped as a bi-encoder
+
+@register_encoder("arch")
+def _arch_encoder(args):
+    """Default builder: a ``--arch`` registry architecture wrapped as a
+    bi-encoder.  Third-party encoders register alongside it and are then
+    selectable as ``--encoder NAME`` (no ``module:function`` needed)."""
     from repro.configs import registry
     from repro.models.biencoder import biencoder_spec
     arch = registry.get(args.arch)
     cfg = arch.smoke_config() if args.smoke else arch.full_config()
     return biencoder_spec(cfg, q_max_len=args.q_max_len,
                           p_max_len=args.p_max_len)
+
+
+def build_encoder(args):
+    if args.encoder:
+        if ":" in args.encoder:            # module:function -> EncoderSpec
+            mod_name, fn_name = args.encoder.split(":")
+            fn = getattr(importlib.import_module(mod_name), fn_name)
+            return fn(args)
+        return ENCODERS.get(args.encoder)(args)   # registered encoder name
+    return ENCODERS.get("arch")(args)
 
 
 def load_texts(paths):
@@ -78,8 +90,15 @@ def main(argv=None) -> int:
                     choices=["csv", "jsonl", "tensorboard", "wandb"])
     ap.add_argument("--batch_size", type=int, default=64)
     ap.add_argument("--engine", default="streaming",
-                    choices=["streaming", "materialized"],
-                    help="validation data path: fused streaming encode->top-k (default) or legacy encode-all-then-retrieve")
+                    help="validation data path: 'streaming' fused "
+                         "encode->top-k (default), 'materialized' legacy "
+                         "encode-all-then-retrieve, or any "
+                         "@register_engine name (validated against the "
+                         "registry right after parsing)")
+    ap.add_argument("--impl", default="xla",
+                    help="retrieval top-k implementation: 'xla' (default), "
+                         "'pallas' (the chunk-carry kernel), or any "
+                         "@register_impl name")
     ap.add_argument("--chunk_size", type=int, default=None,
                     help="streaming chunk rows (default: batch_size)")
     ap.add_argument("--scan_window", type=int, default=8,
@@ -121,7 +140,15 @@ def main(argv=None) -> int:
     ap.add_argument("--fp16", action="store_true",
                     help="bf16 compute (TPU-native half precision)")
     ap.add_argument("--mode", default="retrieval",
-                    choices=["retrieval", "rerank", "average_rank"])
+                    help="'retrieval' (default), 'rerank', 'average_rank', "
+                         "or any @register_mode name")
+    ap.add_argument("--sampler", default="auto",
+                    help="corpus subset strategy (default 'auto': inferred "
+                         "from --mode/--depth exactly as before); any "
+                         "@register_sampler name is selectable ('full', "
+                         "'run_topk', 'qrel_pool', 'random', "
+                         "'rerank_topk', ...), with --depth as its subset "
+                         "depth")
     ap.add_argument("--depth", type=int, default=0,
                     help="subset depth (0 = full corpus); needs --run_file")
     ap.add_argument("--run_file", default=None,
@@ -161,9 +188,11 @@ def main(argv=None) -> int:
                          "(training halts without ever blocking on "
                          "validation)")
     ap.add_argument("--early_stop_metric", default=None,
-                    help="control-plane metric (default: first --metrics "
-                         "entry; AverageRank is minimized, others "
-                         "maximized)")
+                    help="control-plane metric spec (default: first "
+                         "--metrics entry; AverageRank is minimized, others "
+                         "maximized).  Accepts composite specs over a "
+                         "multi-task suite: 'task:metric' or a weighted "
+                         "'0.5*a:MRR@10 + 0.5*b:MRR@10' aggregate")
     ap.add_argument("--early_stop_patience", type=int, default=3,
                     help="evaluations without >= --early_stop_min_delta "
                          "improvement before stopping")
@@ -186,11 +215,68 @@ def main(argv=None) -> int:
                          "re-validate it through the normal path (0 = off)")
     args = ap.parse_args(argv)
 
+    # component names validate against the registries immediately after
+    # parsing, BEFORE any corpus IO: a typo fails instantly with the
+    # registered alternatives (+ did-you-mean) listed.  Deferring this past
+    # parse_args keeps --help and argparse usage errors free of the heavy
+    # jax import the component modules pull in.
+    ensure_builtins()
+    for reg, value in ((ENGINES, args.engine), (IMPLS, args.impl),
+                       (MODES, args.mode)):
+        try:
+            reg.get(value)
+        except ValueError as e:
+            ap.error(str(e))
+    if args.sampler != "auto":
+        try:
+            SAMPLERS.get(args.sampler)
+        except ValueError as e:
+            ap.error(str(e))
+
+    # sampler choice + its run-file dependency, at parse time, BEFORE any
+    # corpus IO: run-subsetting samplers without --run_file would otherwise
+    # fail deep in .sample() after the whole corpus had been loaded.
+    # (--sampler random / qrel_pool use --depth without a run file.)
+    if args.sampler != "auto":
+        chosen_sampler = args.sampler
+    elif args.mode == "rerank":
+        chosen_sampler = "rerank_topk"
+    elif args.mode == "average_rank":
+        chosen_sampler = "qrel_pool"
+    else:
+        chosen_sampler = "run_topk" if args.depth else "full"
+    if chosen_sampler in ("run_topk", "rerank_topk") and not args.run_file:
+        ap.error(f"sampler {chosen_sampler!r} subsets from a baseline run "
+                 "(--depth picks its depth); pass --run_file")
+
+    # control-metric spec validation at parse time, BEFORE any corpus IO: a
+    # typo'd metric or an alien task name in a composite spec would
+    # otherwise KeyError inside every controller invocation, silently
+    # disabling GC/early-stop/ensembling for the whole run.
+    cmetric = None
+    if args.keep_top_k or args.early_stop or args.ensemble_top_k:
+        from repro.control import MetricSpec
+        cmetric = args.early_stop_metric or args.metrics[0]
+        computed = set(args.metrics) | ({"AverageRank"}
+                                        if args.mode == "average_rank"
+                                        else set())
+        # this CLI validates one task named "default": bare and
+        # default-qualified keys are both addressable
+        computed |= {f"default:{m}" for m in set(computed)}
+        try:
+            spec_keys = MetricSpec.parse(cmetric).keys()
+        except ValueError as e:
+            ap.error(str(e))
+        missing = [k for k in spec_keys if k not in computed]
+        if missing:
+            ap.error(f"--early_stop_metric {cmetric!r} references "
+                     f"{missing} not computed by this run; choose from "
+                     f"{sorted(computed)}")
+
     from repro.core.metrics import read_trec_qrels, read_trec_run
-    from repro.core.pipeline import ValidationConfig, ValidationPipeline
     from repro.core.reporting import CSVLogger, JSONLLogger, MultiLogger
-    from repro.core.samplers import (FullCorpus, QrelPool, RerankTopK,
-                                     RunFileTopK)
+    from repro.core.suite import (ValidationConfig, ValidationSuite,
+                                  ValidationTask)
     from repro.core.validator import AsyncValidator
     from repro.core.watcher import BudgetPolicy, Policy
 
@@ -203,22 +289,14 @@ def main(argv=None) -> int:
           f"qrels={len(qrels)}", file=sys.stderr)
 
     baseline_run = read_trec_run(args.run_file) if args.run_file else None
-    if args.depth and baseline_run is None:
-        ap.error("--depth needs --run_file")
-    if args.mode == "rerank":
-        sampler = RerankTopK(depth=args.depth or 100)
-    elif args.mode == "average_rank":
-        sampler = QrelPool(pool=args.depth or 30)
-    elif args.depth:
-        sampler = RunFileTopK(depth=args.depth)
-    else:
-        sampler = FullCorpus()
+    sampler = SAMPLERS.get(chosen_sampler)(depth=args.depth)
 
     mmap_dir = args.mmap_dir
     if args.token_backing == "mmap" and not mmap_dir:
         mmap_dir = os.path.join(args.output_dir, "token_cache")
     vcfg = ValidationConfig(metrics=tuple(args.metrics), mode=args.mode,
                             k=args.retrieve_k, batch_size=args.batch_size,
+                            impl=args.impl,
                             engine=args.engine, chunk_size=args.chunk_size,
                             scan_window=args.scan_window,
                             staging=args.staging,
@@ -230,8 +308,16 @@ def main(argv=None) -> int:
                             write_run=args.write_run,
                             output_dir=args.output_dir,
                             run_tag=args.run_name)
-    pipe = ValidationPipeline(spec, corpus, queries, qrels, vcfg,
-                              sampler=sampler, baseline_run=baseline_run)
+    # the validator-facing object is a (single-task) ValidationSuite — the
+    # CLI validates one task named "default", so its ledger rows, metric
+    # names, and control specs are exactly the legacy pipeline's.
+    suite = ValidationSuite(spec, [
+        ValidationTask("default", corpus, queries, qrels,
+                       sampler=sampler, baseline_run=baseline_run),
+    ], vcfg)
+    # fail fast on deterministic engine-config errors (bad staging depth,
+    # broken third-party factory) instead of per-checkpoint swallowing
+    suite.build_engines()
 
     logdir = args.logging_dir or args.output_dir
     loggers = []
@@ -246,21 +332,11 @@ def main(argv=None) -> int:
         else Policy(kind=args.policy, stride=args.stride)
 
     control = None
-    if args.keep_top_k or args.early_stop or args.ensemble_top_k:
-        from repro.control import ControlConfig, ControlPlane
-        cmetric = args.early_stop_metric or args.metrics[0]
-        computed = set(args.metrics) | ({"AverageRank"}
-                                        if args.mode == "average_rank"
-                                        else set())
-        if cmetric not in computed:
-            # fail fast: a mismatched control metric would otherwise
-            # KeyError inside every controller invocation, silently
-            # disabling GC/early-stop/ensembling for the whole run.
-            ap.error(f"--early_stop_metric {cmetric!r} is not computed by "
-                     f"this run; choose from {sorted(computed)}")
+    if cmetric is not None:
+        from repro.control import ControlConfig, ControlPlane, metric_mode
         ccfg = ControlConfig(
             metric=cmetric,
-            mode="min" if cmetric.lower().startswith("averagerank") else "max",
+            mode=metric_mode(cmetric),
             keep_top_k=args.keep_top_k, ema=args.ema,
             early_stop=args.early_stop,
             patience=args.early_stop_patience,
@@ -279,7 +355,7 @@ def main(argv=None) -> int:
             event_path=os.path.join(logdir, f"{args.run_name}_control.jsonl"))
 
     validator = AsyncValidator(
-        args.ckpts_dir, pipe, logger=MultiLogger(*loggers),
+        args.ckpts_dir, suite, logger=MultiLogger(*loggers),
         policy=policy, controller=control,
         max_num_valid=args.max_num_valid,
         ledger_path=os.path.join(logdir, f"{args.run_name}_ledger.jsonl"),
@@ -288,7 +364,8 @@ def main(argv=None) -> int:
         # restart: warm the ranking from the prior session's ledger rows —
         # old steps are never re-validated (idempotency), and a cold
         # selector would GC the previous session's best checkpoints.
-        control.rehydrate(validator.ledger.rows())
+        control.rehydrate(validator.ledger.rows(),
+                          expected_tasks=suite.task_names)
 
     if args.watch:
         print("[asyncval] watching", args.ckpts_dir, file=sys.stderr)
@@ -298,7 +375,8 @@ def main(argv=None) -> int:
                 n = validator.validate_pending()
                 if n:
                     for r in validator.results[-n:]:
-                        print(f"[asyncval] step {r.step}: {r.metrics} "
+                        print(f"[asyncval] step {r.step}: "
+                              f"{getattr(r, 'log_metrics', r.metrics)} "
                               f"({r.timings['total_s']:.1f}s)")
                 if control is not None and control.stopped and n == 0:
                     # trainer-side STOP is published; the backlog is drained
@@ -312,13 +390,18 @@ def main(argv=None) -> int:
     else:
         validator.validate_all_existing()
         for r in validator.results:
-            print(f"[asyncval] step {r.step}: {r.metrics} "
+            print(f"[asyncval] step {r.step}: "
+                  f"{getattr(r, 'log_metrics', r.metrics)} "
                   f"({r.timings['total_s']:.1f}s)")
 
     if control is not None and args.ensemble_top_k:
-        cmetric = control.cfg.metric
+        from repro.control import MetricSpec
+        cspec = MetricSpec.parse(control.cfg.metric)
+        # scoring passes must not write TREC runs: each soup candidate would
+        # otherwise clobber the real step-0 checkpoint's run file
         vstep = control.build_ensemble(
-            lambda p: pipe.validate_params(p).metrics[cmetric])
+            lambda p: cspec.value(
+                suite.validate_params(p, write_runs=False).metrics))
         if vstep is not None:
             # score the soup through the normal restore->pipeline->ledger
             # path, bypassing the watcher policy (under stride/budget the
@@ -328,7 +411,8 @@ def main(argv=None) -> int:
                        None)
             if res is not None:
                 print(f"[asyncval] ensemble step {vstep} "
-                      f"(soup of {control.ensemble_members}): {res.metrics}")
+                      f"(soup of {control.ensemble_members}): "
+                      f"{getattr(res, 'log_metrics', res.metrics)}")
     return 0 if not validator.errors else 1
 
 

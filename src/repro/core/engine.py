@@ -59,6 +59,9 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.encoder import cached_compiled, encode_texts, jitted_encoder
+from repro.core.registry import (ENGINES, IMPLS, MODES, STAGES,
+                                 register_engine, register_impl,
+                                 register_mode, register_stage)
 from repro.core.retrieval import (_hierarchical_slot_max,
                                   _hierarchical_topk_merge, _merge_topk,
                                   pad_candidates, rank_candidates, rerank_run,
@@ -84,7 +87,30 @@ def _donate(*argnums: int) -> tuple:
 _STORE_META = "store_meta.json"
 _STORE_TOKENS = "tokens.int32.bin"
 _STORE_MASK = "mask.bool.bin"
+_STORE_MANIFEST = "chunk_hashes.json"
 _STORE_VERSION = 1
+
+
+def _chunk_hash(texts: Sequence[Tokens]) -> str:
+    """Content hash of one chunk's texts (the unit of the full-fingerprint
+    manifest: a changed chunk hash means exactly that chunk must be
+    re-padded and re-written)."""
+    h = hashlib.sha1()
+    for t in texts:
+        h.update(np.asarray(list(t), np.int64).tobytes())
+        h.update(b"|")
+    return h.hexdigest()
+
+
+def _full_fingerprint(chunk_hashes: Sequence[str], *, n: int, max_len: int,
+                      chunk: int) -> str:
+    """Overall full-content fingerprint, derived from the per-chunk hashes
+    so the digest and the manifest can never disagree."""
+    h = hashlib.sha1()
+    h.update(f"v{_STORE_VERSION}:full:{n}:{max_len}:{chunk}".encode())
+    for ch in chunk_hashes:
+        h.update(ch.encode())
+    return h.hexdigest()
 
 
 def _store_fingerprint(texts: Sequence[Tokens], *, max_len: int,
@@ -106,11 +132,16 @@ def _store_fingerprint(texts: Sequence[Tokens], *, max_len: int,
     if mode not in ("fast", "full"):
         raise ValueError(f"unknown fingerprint mode {mode!r} "
                          "(expected 'fast' or 'full')")
+    if mode == "full":
+        n_chunks = -(-len(texts) // max(chunk, 1)) if len(texts) else 0
+        hashes = [_chunk_hash(texts[ci * chunk:(ci + 1) * chunk])
+                  for ci in range(n_chunks)]
+        return _full_fingerprint(hashes, n=len(texts), max_len=max_len,
+                                 chunk=chunk)
     h = hashlib.sha1()
     h.update(f"v{_STORE_VERSION}:{mode}:{len(texts)}:{max_len}:{chunk}"
              .encode())
-    scan = texts if mode == "full" else list(texts[:16]) + list(texts[-16:])
-    for t in scan:
+    for t in list(texts[:16]) + list(texts[-16:]):
         h.update(np.asarray(list(t), np.int64).tobytes())
         h.update(b"|")
     return h.hexdigest()
@@ -134,6 +165,9 @@ class TokenStore:
     backing: str = "memory"     # memory | mmap
     cache_dir: Optional[str] = None
     reused: bool = False        # mmap only: True when cache files were reused
+    rebuilt_chunks: int = 0     # chunks padded+written by THIS build (0 on a
+                                # cache hit; < n_chunks on a full-fingerprint
+                                # incremental rebuild via the hash manifest)
 
     @classmethod
     def build(cls, texts: Sequence[Tokens], *, max_len: int, chunk: int,
@@ -161,6 +195,15 @@ class TokenStore:
           ``n_texts`` in the final ragged chunk.
         * ``mask.bool.bin`` — raw C-order ``(n_chunks, chunk, max_len)``
           1-byte bool, ``True`` exactly on real token positions.
+        * ``chunk_hashes.json`` — ``fingerprint="full"`` only: the per-chunk
+          content-hash manifest ``{"version", "hashes": [sha1, ...]}``.  On a
+          rebuild with unchanged geometry, only chunks whose hash differs
+          from the manifest are re-padded and re-written (the memmaps are
+          opened ``r+``), so full-fidelity revalidation costs O(changed
+          chunks) of padding/IO instead of O(corpus) — change detection
+          itself is a hash pass, which is what ``full`` already paid.
+          Written immediately before the meta marker; fast-mode rebuilds
+          delete it so it can never describe bins they rewrote.
 
         The build itself streams chunk by chunk, so peak host memory during
         construction is ``O(chunk x max_len)`` regardless of corpus size;
@@ -182,7 +225,8 @@ class TokenStore:
                 t, m = pad_batch(part, max_len)
                 toks[ci, :len(part)] = t
                 mask[ci, :len(part)] = m
-            return cls(tokens=toks, mask=mask, chunk=chunk, n_texts=n)
+            return cls(tokens=toks, mask=mask, chunk=chunk, n_texts=n,
+                       rebuilt_chunks=n_chunks)
         if backing != "mmap":
             raise ValueError(f"unknown TokenStore backing {backing!r} "
                              "(expected 'memory' or 'mmap')")
@@ -192,35 +236,77 @@ class TokenStore:
         meta_path = os.path.join(cache_dir, _STORE_META)
         tok_path = os.path.join(cache_dir, _STORE_TOKENS)
         mask_path = os.path.join(cache_dir, _STORE_MASK)
-        fp = _store_fingerprint(texts, max_len=max_len, chunk=chunk,
-                                mode=fingerprint)
+        manifest_path = os.path.join(cache_dir, _STORE_MANIFEST)
+        chunk_hashes: Optional[List[str]] = None
+        if fingerprint == "full":
+            chunk_hashes = [_chunk_hash(texts[ci * chunk:(ci + 1) * chunk])
+                            for ci in range(n_chunks)]
+            fp = _full_fingerprint(chunk_hashes, n=n, max_len=max_len,
+                                   chunk=chunk)
+        else:
+            fp = _store_fingerprint(texts, max_len=max_len, chunk=chunk,
+                                    mode=fingerprint)
         meta = {"version": _STORE_VERSION, "n_texts": n, "chunk": chunk,
                 "max_len": max_len, "n_chunks": n_chunks, "fingerprint": fp}
         n_slots = int(np.prod(shape))
-        reused = False
+        stored = None
         if os.path.exists(meta_path):
             try:
                 with open(meta_path) as f:
-                    reused = json.load(f) == meta
+                    stored = json.load(f)
             except ValueError:      # torn/truncated meta: rebuild, not crash
-                reused = False
-            # a valid marker alone is not enough: the bins must exist with
-            # exactly the bytes the marker promises (a partially copied or
-            # hand-cleaned cache_dir must rebuild, not crash or mis-map)
-            if reused and n_chunks:
-                try:
-                    reused = (os.path.getsize(tok_path) == n_slots * 4
-                              and os.path.getsize(mask_path) == n_slots)
-                except OSError:
-                    reused = False
+                stored = None
+        # a valid marker alone is not enough: the bins must exist with
+        # exactly the bytes the marker promises (a partially copied or
+        # hand-cleaned cache_dir must rebuild, not crash or mis-map)
+        sizes_ok = True
+        if n_chunks:
+            try:
+                sizes_ok = (os.path.getsize(tok_path) == n_slots * 4
+                            and os.path.getsize(mask_path) == n_slots)
+            except OSError:
+                sizes_ok = False
+        same_geometry = stored is not None and all(
+            stored.get(k) == meta[k]
+            for k in ("version", "n_texts", "chunk", "max_len", "n_chunks"))
+        reused = (same_geometry and sizes_ok
+                  and stored.get("fingerprint") == fp)
+        rebuilt: List[int] = []
         if not reused and n_chunks:
+            # full-fingerprint incremental rebuild: when the geometry is
+            # unchanged and the previous *full* build left a per-chunk hash
+            # manifest, only chunks whose hash changed are re-padded and
+            # re-written — O(changed chunks) instead of O(corpus).  The
+            # manifest is trustworthy because every code path that rewrites
+            # the bins either rewrites it too (full builds, below) or
+            # removes it (fast builds), and a reused cache touches neither.
+            prev_hashes: Optional[List[str]] = None
+            if same_geometry and sizes_ok and chunk_hashes is not None:
+                try:
+                    with open(manifest_path) as f:
+                        prev = json.load(f)
+                    if (prev.get("version") == _STORE_VERSION
+                            and isinstance(prev.get("hashes"), list)
+                            and len(prev["hashes"]) == n_chunks):
+                        prev_hashes = prev["hashes"]
+                except (OSError, ValueError):
+                    prev_hashes = None
+            incremental = prev_hashes is not None
+            rebuilt = ([ci for ci in range(n_chunks)
+                        if prev_hashes[ci] != chunk_hashes[ci]]
+                       if incremental else list(range(n_chunks)))
             # invalidate the old commit marker FIRST: if this rebuild dies
             # mid-write, no stale meta can bless the half-rewritten bins
             if os.path.exists(meta_path):
                 os.remove(meta_path)
-            wt = np.memmap(tok_path, dtype=np.int32, mode="w+", shape=shape)
-            wm = np.memmap(mask_path, dtype=bool, mode="w+", shape=shape)
-            for ci in range(n_chunks):
+            if not incremental and os.path.exists(manifest_path):
+                # bins are about to stop matching the old manifest; a fast
+                # build writes no replacement, so the stale one must go
+                os.remove(manifest_path)
+            wmode = "r+" if incremental else "w+"
+            wt = np.memmap(tok_path, dtype=np.int32, mode=wmode, shape=shape)
+            wm = np.memmap(mask_path, dtype=bool, mode=wmode, shape=shape)
+            for ci in rebuilt:
                 part = list(texts[ci * chunk:(ci + 1) * chunk])
                 t, m = pad_batch(part, max_len)
                 wt[ci] = 0
@@ -231,6 +317,14 @@ class TokenStore:
             wm.flush()
             del wt, wm
         if not reused:
+            if chunk_hashes is not None:
+                # manifest before meta: a crash in between leaves no meta,
+                # forcing a rebuild — never a meta blessing a stale manifest
+                tmp = manifest_path + ".tmp"
+                with open(tmp, "w") as f:
+                    json.dump({"version": _STORE_VERSION,
+                               "hashes": chunk_hashes}, f)
+                os.replace(tmp, manifest_path)
             # commit marker: meta written LAST, and atomically (a crash
             # mid-write must leave no half-valid marker behind)
             tmp = meta_path + ".tmp"
@@ -244,7 +338,8 @@ class TokenStore:
             toks = np.zeros(shape, np.int32)
             mask = np.zeros(shape, bool)
         return cls(tokens=toks, mask=mask, chunk=chunk, n_texts=n,
-                   backing="mmap", cache_dir=cache_dir, reused=reused)
+                   backing="mmap", cache_dir=cache_dir, reused=reused,
+                   rebuilt_chunks=len(rebuilt))
 
     @property
     def n_chunks(self) -> int:
@@ -747,30 +842,94 @@ class ShardedStreamRerankStage(StreamRerankStage):
         return jax.device_put(host, self.input_sharding)
 
 
+# ---------------------------------------------------------------------------
+# Registry wiring: modes route to impls route to stage names; stage names
+# resolve to normalized factories.  Third-party stages plug in with
+# @register_stage("name") plus a @register_mode / @register_impl route that
+# returns that name — no edits to make_stage required.
+# ---------------------------------------------------------------------------
+
+
+@register_impl("xla")
+def _route_impl_xla(*, mesh=None) -> str:
+    return "topk_sharded" if mesh is not None else "topk_xla"
+
+
+@register_impl("pallas")
+def _route_impl_pallas(*, mesh=None) -> str:
+    # the Pallas chunk-carry kernel is single-device; a mesh does not
+    # override it (mesh users pick impl="xla", the shard_map path)
+    return "topk_pallas"
+
+
+@register_mode("retrieval")
+def _route_mode_retrieval(*, impl: str, mesh=None, per_query=None) -> str:
+    return IMPLS.get(impl)(mesh=mesh)
+
+
+@register_mode("rerank")
+@register_mode("average_rank")
+def _route_mode_rerank(*, impl: str, mesh=None, per_query=None) -> str:
+    if not per_query:           # no candidate lists -> plain retrieval path
+        return IMPLS.get(impl)(mesh=mesh)
+    return "rerank_sharded" if mesh is not None else "rerank"
+
+
+@register_stage("topk_xla")
+def _stage_topk_xla(encode_fn, *, k, query_ids, doc_ids, scan_window=8,
+                    mesh=None, per_query=None, store=None) -> Stage:
+    return StreamTopKStage(encode_fn, k=k, query_ids=query_ids,
+                           doc_ids=doc_ids, window=scan_window)
+
+
+@register_stage("topk_pallas")
+def _stage_topk_pallas(encode_fn, *, k, query_ids, doc_ids, scan_window=8,
+                       mesh=None, per_query=None, store=None) -> Stage:
+    return PallasStreamTopKStage(encode_fn, k=k, query_ids=query_ids,
+                                 doc_ids=doc_ids)
+
+
+@register_stage("topk_sharded")
+def _stage_topk_sharded(encode_fn, *, k, query_ids, doc_ids, scan_window=8,
+                        mesh=None, per_query=None, store=None) -> Stage:
+    return ShardedStreamTopKStage(encode_fn, mesh, k=k, query_ids=query_ids,
+                                  doc_ids=doc_ids)
+
+
+@register_stage("rerank")
+def _stage_rerank(encode_fn, *, k, query_ids, doc_ids, scan_window=8,
+                  mesh=None, per_query=None, store=None) -> Stage:
+    return StreamRerankStage(encode_fn, k=max(k, 1000), query_ids=query_ids,
+                             doc_ids=doc_ids, per_query=per_query,
+                             store=store)
+
+
+@register_stage("rerank_sharded")
+def _stage_rerank_sharded(encode_fn, *, k, query_ids, doc_ids, scan_window=8,
+                          mesh=None, per_query=None, store=None) -> Stage:
+    return ShardedStreamRerankStage(encode_fn, mesh, k=max(k, 1000),
+                                    query_ids=query_ids, doc_ids=doc_ids,
+                                    per_query=per_query, store=store)
+
+
 def make_stage(encode_fn: Callable, *, mode: str, impl: str, k: int,
                query_ids: List[str], doc_ids: List[str],
                per_query: Optional[Dict[str, List[str]]] = None,
                mesh=None, scan_window: int = 8,
                store: Optional[TokenStore] = None) -> Stage:
     """Route (mode, impl, mesh) to a Stage — the single dispatch point every
-    validation path goes through.  ``(mode="rerank", mesh=...)`` just works:
+    validation path goes through, now resolved through the component
+    registries: the ``mode`` route picks a stage name (consulting the
+    ``impl`` route for the retrieval family), and the name resolves to a
+    registered stage factory.  ``(mode="rerank", mesh=...)`` just works:
     rerank shards over the validator mesh exactly like retrieval does.
     ``store`` (the corpus TokenStore) lets the rerank stages precompute
-    per-chunk candidate membership for chunk skipping."""
-    if mode in ("rerank", "average_rank") and per_query:
-        kw = dict(k=max(k, 1000), query_ids=query_ids, doc_ids=doc_ids,
-                  per_query=per_query, store=store)
-        if mesh is not None:
-            return ShardedStreamRerankStage(encode_fn, mesh, **kw)
-        return StreamRerankStage(encode_fn, **kw)
-    if impl == "pallas":
-        return PallasStreamTopKStage(encode_fn, k=k, query_ids=query_ids,
-                                     doc_ids=doc_ids)
-    if mesh is not None:
-        return ShardedStreamTopKStage(encode_fn, mesh, k=k,
-                                      query_ids=query_ids, doc_ids=doc_ids)
-    return StreamTopKStage(encode_fn, k=k, query_ids=query_ids,
-                           doc_ids=doc_ids, window=scan_window)
+    per-chunk candidate membership for chunk skipping.  Unknown mode/impl/
+    stage names raise listing the registered alternatives."""
+    name = MODES.get(mode)(impl=impl, mesh=mesh, per_query=per_query)
+    return STAGES.get(name)(encode_fn, k=k, query_ids=query_ids,
+                            doc_ids=doc_ids, per_query=per_query, mesh=mesh,
+                            scan_window=scan_window, store=store)
 
 
 # ---------------------------------------------------------------------------
@@ -926,62 +1085,115 @@ class MaterializedEngine:
         return run, scores, timings
 
 
-def make_engine(spec, corpus_texts: List[Tokens], query_texts: List[Tokens],
-                *, engine: str, mode: str, k: int, impl: str, batch_size: int,
-                chunk_size: Optional[int], query_ids: List[str],
-                doc_ids: List[str],
-                per_query: Optional[Dict[str, List[str]]] = None, mesh=None,
-                scan_window: int = 8, staging: str = "double_buffered",
-                staging_depth: int = 2, token_backing: str = "memory",
-                mmap_dir: Optional[str] = None,
-                token_fingerprint: str = "fast",
-                rerank_block: Optional[int] = None):
-    """Build the requested engine.  ``chunk_size`` defaults to ``batch_size``
-    (legacy-equivalent encode granularity); with a mesh it is rounded up to a
-    multiple of the shard count so every shard sees equal fixed-shape rows —
-    for EVERY mode: retrieval, rerank, and average_rank all shard over the
-    validator mesh through the same ``make_stage`` dispatch.
+@dataclasses.dataclass
+class ValidationStore:
+    """The sampled data one validation task runs over — the single "store"
+    argument of :func:`make_engine`.
 
-    ``token_backing="mmap"`` spills the corpus TokenStore to memory-mapped
-    files under ``mmap_dir`` (see :meth:`TokenStore.build`;
-    ``token_fingerprint`` picks the fast-vs-full cache key); ``staging``
-    picks double-buffered (default) vs synchronous host→device staging and
-    ``staging_depth`` its prefetch depth (>= 1; 1 equals synchronous
-    staging, 2 is the double buffer, deeper pipelines for remote-storage
-    stores).  ``rerank_block`` caps the materialized rerank
-    path's candidate-gather block height (None = auto from the memory
-    budget) — the streaming path needs no such cap."""
-    if engine == "materialized":
-        return MaterializedEngine(spec, corpus_texts, query_texts, mode=mode,
-                                  k=k, impl=impl, batch_size=batch_size,
-                                  query_ids=query_ids, doc_ids=doc_ids,
-                                  per_query=per_query, mesh=mesh,
-                                  rerank_block=rerank_block)
-    if engine != "streaming":
-        raise ValueError(f"unknown engine {engine!r} "
-                         "(expected 'streaming' or 'materialized')")
-    chunk = chunk_size or batch_size
-    chunk = max(1, min(chunk, max(len(corpus_texts), 1)))
-    q_chunk = max(1, batch_size)
+    Built by :class:`repro.core.suite.ValidationSuite` (one per task, after
+    the task's sampler ran) or by any caller that already knows its subset.
+    ``doc_store``/``query_store`` are optional pre-built
+    :class:`TokenStore`\\ s: the suite fills ``doc_store`` from its shared
+    cache so tasks over the same sampled corpus pad it exactly once; when
+    absent, the engine factory builds them from the texts.
+    """
+
+    query_ids: List[str]
+    query_texts: List[Tokens]
+    doc_ids: List[str]
+    doc_texts: List[Tokens]
+    per_query: Optional[Dict[str, List[str]]] = None
+    doc_store: Optional[TokenStore] = None
+    query_store: Optional[TokenStore] = None
+
+
+def chunk_geometry(vcfg, n_docs: int, mesh=None) -> Tuple[int, int]:
+    """(corpus chunk rows, query chunk rows) for a config.  ``chunk_size``
+    defaults to ``batch_size`` (legacy-equivalent encode granularity); with
+    a mesh both are rounded up to a multiple of the shard count so every
+    shard sees equal fixed-shape rows — for EVERY mode: retrieval, rerank,
+    and average_rank all shard through the same ``make_stage`` dispatch.
+    Shared by the engine factories and the suite's TokenStore cache (two
+    tasks share a store only when this geometry matches)."""
+    chunk = vcfg.chunk_size or vcfg.batch_size
+    chunk = max(1, min(chunk, max(n_docs, 1)))
+    q_chunk = max(1, vcfg.batch_size)
     if mesh is not None:
         n_shards = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
         chunk = -(-chunk // n_shards) * n_shards
         # query chunks shard over the same mesh: equal fixed-shape rows too
         q_chunk = -(-q_chunk // n_shards) * n_shards
-    if token_backing == "mmap" and not mmap_dir:
-        raise ValueError("token_backing='mmap' needs mmap_dir")
-    doc_store = TokenStore.build(
-        corpus_texts, max_len=spec.p_max_len, chunk=chunk,
-        backing=token_backing,
-        cache_dir=os.path.join(mmap_dir, "corpus_tokens") if mmap_dir
-        else None,
-        fingerprint=token_fingerprint)
-    query_store = TokenStore.build(query_texts, max_len=spec.q_max_len,
-                                   chunk=q_chunk)
-    stage = make_stage(spec.encode_passage, mode=mode, impl=impl, k=k,
-                       query_ids=query_ids, doc_ids=doc_ids,
-                       per_query=per_query, mesh=mesh,
-                       scan_window=scan_window, store=doc_store)
+    return chunk, q_chunk
+
+
+def doc_cache_dir(mmap_dir: Optional[str], index: int = 0) -> Optional[str]:
+    """Cache subdirectory for the ``index``-th distinct corpus TokenStore
+    under ``mmap_dir``.  Index 0 keeps the historical ``corpus_tokens`` name
+    (single-task runs and their existing caches); later stores (a multi-task
+    suite over several corpora) get numbered siblings."""
+    if not mmap_dir:
+        return None
+    name = "corpus_tokens" if index == 0 else f"corpus_tokens_{index}"
+    return os.path.join(mmap_dir, name)
+
+
+@register_engine("streaming")
+def make_streaming_engine(spec, store: ValidationStore, vcfg):
+    """The default fused encode→top-k data path (see module docstring)."""
+    mesh = vcfg.mesh
+    chunk, q_chunk = chunk_geometry(vcfg, len(store.doc_texts), mesh)
+    doc_store = store.doc_store
+    if doc_store is None:
+        if vcfg.token_backing == "mmap" and not vcfg.mmap_dir:
+            raise ValueError("token_backing='mmap' needs mmap_dir")
+        doc_store = TokenStore.build(
+            store.doc_texts, max_len=spec.p_max_len, chunk=chunk,
+            backing=vcfg.token_backing,
+            cache_dir=doc_cache_dir(vcfg.mmap_dir),
+            fingerprint=vcfg.token_fingerprint)
+    query_store = store.query_store
+    if query_store is None:
+        query_store = TokenStore.build(store.query_texts,
+                                       max_len=spec.q_max_len, chunk=q_chunk)
+    stage = make_stage(spec.encode_passage, mode=vcfg.mode, impl=vcfg.impl,
+                       k=vcfg.k, query_ids=store.query_ids,
+                       doc_ids=store.doc_ids, per_query=store.per_query,
+                       mesh=mesh, scan_window=vcfg.scan_window,
+                       store=doc_store)
     return StreamingEngine(spec, doc_store, query_store, stage,
-                           staging=staging, staging_depth=staging_depth,
-                           query_mesh=mesh)
+                           staging=vcfg.staging,
+                           staging_depth=vcfg.staging_depth, query_mesh=mesh)
+
+
+# declares that this factory consumes ValidationStore.doc_store when one is
+# supplied: the ValidationSuite routes the corpus TokenStore through its
+# shared cache for every factory carrying this attribute, so corpus-sharing
+# tasks pad the store once.  Third-party engines opt in the same way.
+make_streaming_engine.uses_token_stores = True
+
+
+@register_engine("materialized")
+def make_materialized_engine(spec, store: ValidationStore, vcfg):
+    """The legacy encode-all-then-retrieve path, for A/B benchmarking."""
+    return MaterializedEngine(spec, store.doc_texts, store.query_texts,
+                              mode=vcfg.mode, k=vcfg.k, impl=vcfg.impl,
+                              batch_size=vcfg.batch_size,
+                              query_ids=store.query_ids,
+                              doc_ids=store.doc_ids,
+                              per_query=store.per_query, mesh=vcfg.mesh,
+                              rerank_block=vcfg.rerank_block)
+
+
+def make_engine(spec, store: ValidationStore, vcfg):
+    """Build the engine a :class:`~repro.core.suite.ValidationConfig` asks
+    for.  The whole config travels intact — engine factories read the fields
+    they care about (``engine``, ``mode``, ``impl``, ``k``, staging/backing
+    knobs, ``mesh``) instead of every call site exploding 15 kwargs.  The
+    ``engine`` name resolves through the :data:`~repro.core.registry.
+    ENGINES` registry, so third-party engines registered with
+    ``@register_engine`` are constructed exactly like the built-ins;
+    unknown engine/mode/impl names raise listing the registered
+    alternatives."""
+    MODES.get(vcfg.mode)            # fail fast, with alternatives, even for
+    IMPLS.get(vcfg.impl)            # engines that defer stage construction
+    return ENGINES.get(vcfg.engine)(spec, store, vcfg)

@@ -1,0 +1,59 @@
+"""Crash-tolerant JSONL loading, shared by every append-only fsync'd log.
+
+The validator ledger and the control event log append one fsync'd JSON line
+per record.  A process killed mid-append (crash / power loss) leaves a torn
+FINAL line; :func:`read_jsonl_tolerant` drops exactly that line and reports
+its byte offset so the OWNING WRITER can truncate it away before its next
+append (a clean line instead of gluing onto the fragment).  Loading never
+mutates the file — an offline audit reading a LIVE log must not race the
+writer's in-flight append by truncating what merely looks torn.  A
+malformed line anywhere ELSE means real corruption (bit rot, concurrent
+writers, hand edits) and raises — silently dropping interior records would
+corrupt replay.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import List, Optional, Tuple
+
+
+def read_jsonl_tolerant(path: str, *,
+                        kind: str = "row") -> Tuple[List[dict],
+                                                    Optional[int]]:
+    """Parse ``path`` as JSONL, tolerating a torn final line.
+
+    Returns ``(records, torn_offset)`` — ``torn_offset`` is the byte offset
+    of the dropped torn final line (None when the file is clean).  The
+    single writer that owns the file calls :func:`truncate_torn_tail` with
+    it before the first append; readers leave the file untouched.  ``kind``
+    names the record type in error messages."""
+    with open(path, "rb") as f:
+        raw = f.read()
+    offset, lines = 0, []                # (lineno, byte offset, line)
+    for i, ln in enumerate(raw.splitlines(keepends=True), 1):
+        if ln.strip():
+            lines.append((i, offset, ln))
+        offset += len(ln)
+    out: List[dict] = []
+    for pos, (lineno, start, line) in enumerate(lines):
+        try:
+            out.append(json.loads(line))
+        except ValueError:
+            if pos == len(lines) - 1:
+                # torn final line: the append died mid-write; dropped here,
+                # truncated by the owning writer before its next append
+                return out, start
+            raise ValueError(
+                f"corrupt {kind} at {path}:{lineno} (only a torn FINAL "
+                f"line is recoverable)")
+    return out, None
+
+
+def truncate_torn_tail(path: str, torn_offset: Optional[int]) -> None:
+    """Writer-side repair: cut the torn tail reported by
+    :func:`read_jsonl_tolerant` so the next append starts a clean line.
+    No-op when the load was clean."""
+    if torn_offset is not None:
+        with open(path, "r+b") as f:
+            f.truncate(torn_offset)

@@ -1,107 +1,92 @@
-"""ValidationPipeline — thin façade over the streaming ValidationEngine.
+"""ValidationPipeline — DEPRECATED single-task shim over the ValidationSuite.
 
-One validation of one checkpoint = encode (subset of) corpus + queries with
-the checkpoint's weights, retrieve, score.  Modes:
+The public validation API now lives in :mod:`repro.core.suite`: a
+:class:`~repro.core.suite.ValidationSuite` validates checkpoints against N
+:class:`~repro.core.suite.ValidationTask`\\ s in one pass, sharing TokenStores
+between tasks and building engines through the pluggable component
+registries (:mod:`repro.core.registry`).  This module keeps the original
+one-corpus/one-queries/one-qrels constructor working, bit for bit: a
+``ValidationPipeline`` is exactly a one-task suite whose task is named
+``"default"``, and ``validate_params`` returns that task's
+:class:`~repro.core.suite.ValidationResult` unchanged.
 
-  * ``retrieval``     — full (or subset) corpus top-k retrieval (paper default)
-  * ``rerank``        — RocketQA-style per-query candidate re-ranking
-  * ``average_rank``  — DPR-style pooled average-rank validation
+New code should construct the suite directly::
 
-The corpus subset is computed ONCE (the sampler depends only on the baseline
-run + qrels, not the checkpoint) and the pre-tokenized texts are padded once
-into the engine's TokenStore — both costs amortize across checkpoints,
-exactly as the paper's pre-tokenization argument (§3) prescribes.
+    from repro.core.suite import (ValidationConfig, ValidationSuite,
+                                  ValidationTask)
+    suite = ValidationSuite(spec, [ValidationTask("default", corpus,
+                                                  queries, qrels,
+                                                  sampler=sampler)], vcfg)
 
-The data path itself lives in :mod:`repro.core.engine`: by default a fused
-encode→top-k streaming loop that never materializes the ``(N, D)`` corpus
-embedding matrix (``ValidationConfig.engine = "streaming"``); set
-``engine="materialized"`` for the legacy encode-all-then-retrieve path.
-``token_backing="mmap"`` (+ ``mmap_dir``) spills the pre-padded corpus
-tokens to memory-mapped files so even the tokens can exceed host RAM
-(``token_fingerprint="full"`` opts the cache key into a full content hash),
-``staging`` selects double-buffered (default) vs synchronous host→device
-chunk staging with a configurable prefetch depth (``staging_depth``) — all
-bit-for-bit identical to the in-memory sync path.  Every mode shards over
-``mesh``, rerank included (the sharded streaming rerank stage), and the
-materialized rerank path gathers candidates in query blocks
-(``rerank_block``) so its peak memory no longer scales with Q.
+``ValidationConfig`` / ``ValidationResult`` / ``params_from_checkpoint``
+are re-exported here unchanged for backward compatibility.
 """
 
 from __future__ import annotations
 
-import dataclasses
+import warnings
 from typing import Any, Dict, Optional
 
-from repro.core import metrics as metrics_lib
-from repro.core.engine import make_engine
-from repro.core.samplers import FullCorpus, SubsetResult
-from repro.models.biencoder import EncoderSpec
+from repro.core.suite import (SuiteResult, ValidationConfig, ValidationResult,
+                              ValidationSuite, ValidationTask,
+                              params_from_checkpoint)
 
+__all__ = ["ValidationConfig", "ValidationResult", "ValidationPipeline",
+           "params_from_checkpoint"]
 
-@dataclasses.dataclass
-class ValidationConfig:
-    metrics: tuple = ("MRR@10",)
-    mode: str = "retrieval"          # retrieval | rerank | average_rank
-    k: int = 100                     # retrieval cut-off
-    batch_size: int = 64
-    impl: str = "xla"                # xla | pallas
-    mesh: Any = None                 # optional sharded retrieval mesh
-    engine: str = "streaming"        # streaming | materialized (legacy)
-    chunk_size: Optional[int] = None  # streaming chunk rows; None -> batch_size
-    scan_window: int = 8             # chunks folded per dispatch (xla stage)
-    staging: str = "double_buffered"  # double_buffered | sync host->device
-    staging_depth: int = 2           # prefetch depth (2 = double buffer;
-                                     # deeper for remote-storage stores)
-    token_backing: str = "memory"    # memory | mmap (out-of-core TokenStore)
-    mmap_dir: Optional[str] = None   # cache dir for token_backing="mmap"
-    token_fingerprint: str = "fast"  # fast (O(1)) | full (content hash)
-    rerank_block: Optional[int] = None  # queries per materialized rerank
-                                     # candidate gather (None = auto budget)
-    write_run: bool = False
-    output_dir: Optional[str] = None
-    run_tag: str = "asyncval"
-
-
-@dataclasses.dataclass
-class ValidationResult:
-    step: int
-    metrics: Dict[str, float]
-    timings: Dict[str, float]
-    subset_size: int
-    # which data path produced the numbers ("streaming"/"materialized"/...);
-    # recorded in the validator ledger so cross-mode parity can be audited
-    # after the fact.
-    engine: str = ""
+_DEPRECATION_MSG = (
+    "ValidationPipeline is deprecated; build a ValidationSuite with a "
+    "single ValidationTask instead (repro.core.suite).")
+_warned = False
 
 
 class ValidationPipeline:
-    def __init__(self, spec: EncoderSpec, corpus: Dict[str, list],
+    """Deprecated façade: one validation task, suite underneath.
+
+    Emits a :class:`DeprecationWarning` exactly once per process (the shim
+    is a migration aid, not a nag).  All documented legacy attributes —
+    ``engine``, ``subset``, ``doc_ids``, ``doc_texts``, ``query_ids``,
+    ``query_texts``, ``sampler_name`` — keep working.
+    """
+
+    def __init__(self, spec, corpus: Dict[str, list],
                  queries: Dict[str, list], qrels: Dict[str, Dict[str, int]],
                  vcfg: ValidationConfig, *, sampler=None,
                  baseline_run: Optional[Dict[str, list]] = None,
                  engine=None):
+        global _warned
+        if not _warned:
+            _warned = True
+            warnings.warn(_DEPRECATION_MSG, DeprecationWarning, stacklevel=2)
+        task = ValidationTask("default", corpus, queries, qrels,
+                              mode=vcfg.mode, sampler=sampler,
+                              baseline_run=baseline_run,
+                              metrics=tuple(vcfg.metrics), k=vcfg.k)
+        self.suite = ValidationSuite(spec, [task], vcfg)
         self.spec = spec
         self.vcfg = vcfg
         self.qrels = qrels
-        self.query_ids = list(queries)
-        self.query_texts = [queries[q] for q in self.query_ids]
-        sampler = sampler or FullCorpus()
-        self.sampler_name = sampler.name
-        self.subset: SubsetResult = sampler.sample(list(corpus), baseline_run,
-                                                   qrels)
-        self.doc_ids = self.subset.doc_ids
-        self.doc_texts = [corpus[d] for d in self.doc_ids]
-        self.engine = engine if engine is not None else make_engine(
-            spec, self.doc_texts, self.query_texts, engine=vcfg.engine,
-            mode=vcfg.mode, k=vcfg.k, impl=vcfg.impl,
-            batch_size=vcfg.batch_size, chunk_size=vcfg.chunk_size,
-            query_ids=self.query_ids, doc_ids=self.doc_ids,
-            per_query=self.subset.per_query, mesh=vcfg.mesh,
-            scan_window=vcfg.scan_window, staging=vcfg.staging,
-            staging_depth=vcfg.staging_depth,
-            token_backing=vcfg.token_backing, mmap_dir=vcfg.mmap_dir,
-            token_fingerprint=vcfg.token_fingerprint,
-            rerank_block=vcfg.rerank_block)
+        self._engine_override = engine
+        data = self.suite._data["default"]
+        self.query_ids = data.query_ids
+        self.query_texts = data.query_texts
+        self.sampler_name = self.suite.sampler_names["default"]
+        self.subset = self.suite.subsets["default"]
+        self.doc_ids = data.doc_ids
+        self.doc_texts = data.doc_texts
+        if engine is None:
+            # legacy behaviour: the engine (and every config error it can
+            # raise — bad staging, mmap without a dir) surfaces at
+            # construction time, not at the first validate_params
+            self.suite.engine("default")
+
+    # validator-facing surface (same duck type as ValidationSuite) ----------
+    task_names = ("default",)
+
+    @property
+    def engine(self):
+        return self._engine_override if self._engine_override is not None \
+            else self.suite.engine("default")
 
     # -- one checkpoint ----------------------------------------------------
     def validate_params(self, params, step: int = 0, *,
@@ -109,28 +94,7 @@ class ValidationPipeline:
         """Validate one checkpoint.  ``engine`` overrides the pipeline's
         engine for this call only (the AsyncValidator injection path) —
         the pipeline itself is never mutated."""
-        v = self.vcfg
-        eng = engine or self.engine
-        run, scores, timings = eng.run(params)
-
-        names = list(v.metrics)
-        if v.mode == "average_rank" and "AverageRank" not in names:
-            names.append("AverageRank")
-        m = metrics_lib.compute_metrics(run, self.qrels, names)
-
-        if v.write_run and v.output_dir:
-            import os
-            os.makedirs(v.output_dir, exist_ok=True)
-            metrics_lib.write_trec_run(
-                f"{v.output_dir}/{v.run_tag}_step{step}.trec", run, scores,
-                tag=v.run_tag)
-
-        return ValidationResult(step=step, metrics=m, timings=timings,
-                                subset_size=len(self.doc_ids),
-                                engine=getattr(eng, "name", ""))
-
-
-def params_from_checkpoint(state: Any) -> Any:
-    """Default extractor: trainer saves {"params":..., "opt_state":...}."""
-    return state["params"] if isinstance(state, dict) and "params" in state \
-        else state
+        eng = engine if engine is not None else self._engine_override
+        res: SuiteResult = self.suite.validate_params(params, step=step,
+                                                      engine=eng)
+        return res.tasks["default"]

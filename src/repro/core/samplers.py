@@ -21,6 +21,7 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.metrics import Qrels
+from repro.core.registry import register_sampler
 
 
 @dataclasses.dataclass
@@ -132,6 +133,40 @@ class RerankTopK:
             per_query[qid] = merged
             union.update(merged)
         return SubsetResult(doc_ids=sorted(union), per_query=per_query)
+
+
+# ---------------------------------------------------------------------------
+# Registry wiring: the sampler names the CLI / ValidationTask accept.  Each
+# factory takes the subset ``depth`` (falling back to the strategy's
+# historical default when 0) so `--sampler NAME --depth D` and
+# `ValidationTask(sampler="NAME", sampler_depth=D)` both resolve here.
+# Third-party samplers plug in with @register_sampler("name").
+# ---------------------------------------------------------------------------
+
+
+@register_sampler("full")
+def _make_full(depth: int = 0) -> FullCorpus:
+    return FullCorpus()
+
+
+@register_sampler("run_topk")
+def _make_run_topk(depth: int = 0) -> RunFileTopK:
+    return RunFileTopK(depth=depth or 100)
+
+
+@register_sampler("qrel_pool")
+def _make_qrel_pool(depth: int = 0) -> QrelPool:
+    return QrelPool(pool=depth or 30)
+
+
+@register_sampler("random")
+def _make_random(depth: int = 0) -> RandomSubset:
+    return RandomSubset(n=depth or 100)
+
+
+@register_sampler("rerank_topk")
+def _make_rerank_topk(depth: int = 0) -> RerankTopK:
+    return RerankTopK(depth=depth or 100)
 
 
 def write_subset_jsonl(subset: SubsetResult, corpus: dict, out_path: str):

@@ -16,68 +16,153 @@ import json
 import os
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.ckpt import checkpoint as ckpt
-from repro.core.pipeline import (ValidationPipeline, ValidationResult,
-                                 params_from_checkpoint)
+from repro.core.jsonl import read_jsonl_tolerant, truncate_torn_tail
 from repro.core.reporting import BaseLogger
+from repro.core.suite import (SuiteResult, ValidationResult,
+                              params_from_checkpoint)
 from repro.core.watcher import CheckpointWatcher, Policy
 
 
 class ValidationLedger:
-    """Append-only record of validated steps (idempotent restarts).
+    """Append-only record of validated (step, task) pairs (idempotent
+    restarts).
+
+    Schema v2: one JSONL row per (step, task) — a multi-task
+    :class:`~repro.core.suite.ValidationSuite` appends one row per task for
+    every checkpoint pass.  Schema-v1 rows (no ``"task"`` key) migrate on
+    load as task ``"default"``, so pre-suite ledgers load and replay
+    identically.
+
+    ``expected_tasks`` (the suite's task names, wired by the validator)
+    defines step completion: a step counts as validated only when EVERY
+    expected task has a row — a crash between task rows re-validates the
+    step instead of silently dropping the missing tasks.  Without it, any
+    row completes the step (v1 semantics).
+
+    Crash tolerance: a process killed mid-append leaves a torn final line;
+    load ignores exactly that (the unledgered step is simply re-validated).
+    A torn line anywhere ELSE means real corruption and still raises.
 
     Concurrency-safe: the control plane (selector / early-stop / GC) reads
     this ledger from the validator thread while ``record`` may run — a lock
-    guards the row map, appends are flushed + fsync'd so no consumer (in
+    guards the row state, appends are flushed + fsync'd so no consumer (in
     this process or a crash-restarted one) can observe a torn row, and
-    :meth:`rows` hands out a snapshot instead of the live dict."""
+    :meth:`rows` hands out a snapshot instead of live dicts."""
 
-    def __init__(self, path: Optional[str]):
+    def __init__(self, path: Optional[str],
+                 expected_tasks: Optional[Sequence[str]] = None):
         self.path = path
+        self.expected_tasks: Optional[Tuple[str, ...]] = \
+            tuple(expected_tasks) if expected_tasks is not None else None
         self._lock = threading.Lock()
-        self._done: Dict[int, dict] = {}
+        self._rows: List[dict] = []                    # record order
+        self._index: Dict[Tuple[int, str], int] = {}   # (step, task) -> row
+        self._by_step: Dict[int, set] = {}             # step -> task names
+        self._torn_offset: Optional[int] = None
         if path and os.path.exists(path):
-            with open(path) as f:
-                for line in f:
-                    if line.strip():
-                        rec = json.loads(line)
-                        self._done[int(rec["step"])] = rec
+            # torn FINAL line (crash mid-append) is dropped — that step
+            # simply re-validates; interior corruption raises.  Loading
+            # never mutates the file (an audit may be reading a live
+            # ledger); the fragment is truncated just before OUR first
+            # append, by the writer that owns the file.
+            rows, self._torn_offset = read_jsonl_tolerant(path,
+                                                          kind="ledger row")
+            for rec in rows:
+                self._ingest(rec)
+
+    def _ingest(self, rec: dict) -> None:
+        step = int(rec["step"])
+        task = str(rec.get("task", "default"))    # v1 rows migrate here
+        rec = {**rec, "step": step, "task": task}
+        key = (step, task)
+        if key in self._index:
+            # re-record (a partially-recorded step re-validated after a
+            # crash): supersede the stale row and append the fresh one at
+            # the END, where its sibling task rows land too — replay groups
+            # CONSECUTIVE same-step rows into one observation, so the
+            # re-validated step must appear as one fresh consecutive block,
+            # exactly when the online decision was made.
+            self._rows[self._index[key]] = None
+        self._index[key] = len(self._rows)
+        self._rows.append(rec)
+        self._by_step.setdefault(step, set()).add(task)
+
+    def _completed(self, step: int) -> bool:
+        tasks = self._by_step.get(step)
+        if not tasks:
+            return False
+        if self.expected_tasks is None:
+            return True                           # v1 semantics: any row
+        return all(t in tasks for t in self.expected_tasks)
+
+    def completed(self, step: int) -> bool:
+        """True when every expected task has a row for ``step``."""
+        with self._lock:
+            return self._completed(step)
 
     def __contains__(self, step: int) -> bool:
+        return self.completed(step)
+
+    def tasks_for(self, step: int) -> List[str]:
         with self._lock:
-            return step in self._done
+            return sorted(self._by_step.get(step, ()))
 
     @property
     def validated_steps(self) -> List[int]:
         with self._lock:
-            return sorted(self._done)
+            return sorted(s for s in self._by_step if self._completed(s))
 
     def rows(self) -> List[dict]:
-        """Snapshot of all rows in RECORD order (the order decisions were
-        made in — offline replay of the control plane depends on it)."""
+        """Snapshot of all live rows in RECORD order (the order decisions
+        were made in — offline replay of the control plane depends on it).
+        Rows superseded by a re-record are omitted."""
         with self._lock:
-            return [dict(rec) for rec in self._done.values()]
+            return [dict(rec) for rec in self._rows if rec is not None]
 
-    def record(self, result: ValidationResult) -> None:
-        rec = {"step": result.step, "metrics": result.metrics,
-               "timings": result.timings, "subset_size": result.subset_size,
-               # which data path scored this step — lets a cross-mode parity
-               # audit (streaming vs materialized vs sharded) attribute every
-               # ledger row long after the run.
-               "engine": getattr(result, "engine", "")}
+    def record(self, result) -> None:
+        """Append one row per task: a :class:`SuiteResult` contributes every
+        task's row (consecutively, so replay groups them back into one
+        observation); a plain :class:`ValidationResult` contributes its own
+        (task ``"default"`` unless set)."""
+        results = list(result.tasks.values()) \
+            if isinstance(result, SuiteResult) or hasattr(result, "tasks") \
+            else [result]
+        recs = [{"step": r.step,
+                 "task": str(getattr(r, "task", "default")),
+                 "metrics": r.metrics, "timings": r.timings,
+                 "subset_size": r.subset_size,
+                 # which data path scored this step — lets a cross-mode
+                 # parity audit (streaming vs materialized vs sharded)
+                 # attribute every ledger row long after the run.
+                 "engine": getattr(r, "engine", "")}
+                for r in results]
         with self._lock:
-            self._done[result.step] = rec
+            for rec in recs:
+                self._ingest(rec)
             if self.path:
+                if self._torn_offset is not None:   # writer-side repair
+                    truncate_torn_tail(self.path, self._torn_offset)
+                    self._torn_offset = None
                 with open(self.path, "a") as f:
-                    f.write(json.dumps(rec) + "\n")
+                    for rec in recs:
+                        f.write(json.dumps(rec) + "\n")
                     f.flush()
                     os.fsync(f.fileno())
 
 
 class AsyncValidator:
-    def __init__(self, ckpt_root: str, pipeline: ValidationPipeline, *,
+    """Watches ``ckpt_root`` and validates every committed checkpoint.
+
+    ``pipeline`` is anything with ``validate_params(params, step=, engine=)``
+    — a :class:`~repro.core.suite.ValidationSuite` (per-task ledger rows),
+    the deprecated single-task ``ValidationPipeline`` shim, or a custom
+    object.  Its optional ``task_names`` attribute defines ledger-completion
+    semantics (absent -> the single ``"default"`` task)."""
+
+    def __init__(self, ckpt_root: str, pipeline, *,
                  logger: Optional[BaseLogger] = None,
                  policy: Optional[Policy] = None,
                  max_num_valid: Optional[int] = None,
@@ -97,7 +182,10 @@ class AsyncValidator:
         self.logger = logger
         self.watcher = CheckpointWatcher(ckpt_root, policy=policy)
         self.max_num_valid = max_num_valid
-        self.ledger = ValidationLedger(ledger_path)
+        # completion = a row for every suite task (single-task pipelines and
+        # doubles fall back to the one "default" task = v1 semantics)
+        expected = tuple(getattr(pipeline, "task_names", ()) or ("default",))
+        self.ledger = ValidationLedger(ledger_path, expected_tasks=expected)
         self.poll_interval_s = poll_interval_s
         self.params_extractor = params_extractor
         self.shardings = shardings      # validator-mesh layout (elastic)
@@ -130,12 +218,16 @@ class AsyncValidator:
         latest_first) the soup's step id may never be policy-selected, and
         it must not end up policy-skipped and unscored."""
         self.watcher.mark_seen(step)           # claimed: not pending, and
-        return self._validate([step])          # not counted as skipped
+        return self._validate([step],          # not counted as skipped
+                              ignore_cap=True)
 
-    def _validate(self, steps) -> int:
+    def _validate(self, steps, *, ignore_cap: bool = False) -> int:
         n = 0
         for step in steps:
-            if self.max_num_valid is not None \
+            # max_num_valid caps the watcher-driven loop only; an explicit
+            # validate_step (the soup's scoring path) must not be silently
+            # swallowed by it, or the committed ensemble stays unledgered.
+            if not ignore_cap and self.max_num_valid is not None \
                     and len(self.results) >= self.max_num_valid:
                 break
             if step in self.ledger:
@@ -163,7 +255,10 @@ class AsyncValidator:
             self.watcher.policy.observe_latency(
                 float(result.timings.get("total_s", 0.0)))
             if self.logger is not None:
-                self.logger.log(step, {**result.metrics, **result.timings,
+                # reporter schema: bare names for the default task, task-
+                # qualified for the rest (no default: duplicates)
+                logmet = getattr(result, "log_metrics", result.metrics)
+                self.logger.log(step, {**logmet, **result.timings,
                                        "subset_size": result.subset_size})
             if self.controller is not None:
                 try:

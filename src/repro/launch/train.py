@@ -32,8 +32,9 @@ import numpy as np
 from repro.ckpt import checkpoint as ckpt
 from repro.configs import registry
 from repro.control import ControlConfig, ControlPlane
-from repro.core.pipeline import ValidationConfig, ValidationPipeline
 from repro.core.reporting import JSONLLogger
+from repro.core.suite import (ValidationConfig, ValidationSuite,
+                              ValidationTask)
 from repro.core.samplers import FullCorpus, RunFileTopK
 from repro.core.validator import AsyncValidator
 from repro.core.watcher import BudgetPolicy, Policy
@@ -121,8 +122,15 @@ def run(args) -> dict:
     sampler = (RunFileTopK(depth=args.depth) if args.subset else FullCorpus())
     vcfg = ValidationConfig(metrics=("MRR@10", "Recall@100"),
                             k=100, batch_size=args.batch_size)
-    pipeline = ValidationPipeline(spec, ds.corpus, ds.queries, ds.qrels, vcfg,
-                                  sampler=sampler, baseline_run=baseline_run)
+    # single-task suite named "default": ledger rows, metric names and the
+    # control plane's "MRR@10" spec are exactly the legacy pipeline's.
+    suite = ValidationSuite(spec, [
+        ValidationTask("default", ds.corpus, ds.queries, ds.qrels,
+                       sampler=sampler, baseline_run=baseline_run),
+    ], vcfg)
+    # fail fast on deterministic engine-config errors instead of having
+    # every checkpoint's validation swallowed by the retry loop
+    suite.build_engines()
 
     # convergence control plane: ledger-driven selection + quality-aware GC,
     # async early stop via the STOP marker, post-run checkpoint ensembling.
@@ -141,7 +149,7 @@ def run(args) -> dict:
     policy = BudgetPolicy() if policy_kind == "budget" \
         else Policy(kind=policy_kind, stride=getattr(args, "stride", 1))
     validator = AsyncValidator(
-        ckpt_dir, pipeline, policy=policy, controller=control,
+        ckpt_dir, suite, policy=policy, controller=control,
         logger=JSONLLogger(os.path.join(args.workdir, "valid.jsonl")),
         ledger_path=os.path.join(args.workdir, "ledger.jsonl"))
     if control is not None:
@@ -149,7 +157,8 @@ def run(args) -> dict:
         # quality-aware GC never forgets already-validated checkpoints
         # (old steps are skipped by idempotency and would otherwise be
         # invisible to a cold selector).
-        control.rehydrate(validator.ledger.rows())
+        control.rehydrate(validator.ledger.rows(),
+                          expected_tasks=suite.task_names)
 
     def feed_control(step, m):
         if control is not None:
@@ -174,7 +183,8 @@ def run(args) -> dict:
     ensemble = None
     if control is not None and ensemble_top_k > 0:
         vstep = control.build_ensemble(
-            lambda p: pipeline.validate_params(p).metrics["MRR@10"])
+            lambda p: suite.validate_params(
+                p, write_runs=False).metrics["MRR@10"])
         if vstep is not None:
             # policy-proof: score the soup via the normal path even when a
             # stride/budget policy would never select its step id
@@ -182,14 +192,14 @@ def run(args) -> dict:
             res = next((r for r in validator.results if r.step == vstep),
                        None)
             ensemble = {"step": vstep, "members": control.ensemble_members,
-                        "metrics": res.metrics if res else None}
+                        "metrics": res.log_metrics if res else None}
     wall = time.time() - t0
 
     results = {
         "wall_time_s": wall,
         "mode": "sync" if args.sync else "async",
         "validated_steps": validator.ledger.validated_steps,
-        "metrics": {r.step: r.metrics for r in validator.results},
+        "metrics": {r.step: r.log_metrics for r in validator.results},
         "errors": validator.errors,
         "stopped_early": trainer.stopped_early,
         "stop_verdict": trainer.stop_verdict,

@@ -1,0 +1,856 @@
+"""The PR-5 public API: component registries, multi-task ValidationSuite,
+schema-v2 (step, task) ledger, composite control metrics, the deprecated
+ValidationPipeline shim, and the TokenStore chunk-hash manifest.
+
+This file must stay clean under ``-W error::DeprecationWarning`` (a CI job
+enforces it): internal code never constructs the deprecated shim, and the
+tests that deliberately do wrap it in a warning catcher.
+"""
+
+import json
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+from repro.control import (ControlConfig, ControlPlane, MetricSpec,
+                           flatten_rows, metric_mode, replay_ledger)
+from repro.core import engine as E
+from repro.core.registry import (ENGINES, SAMPLERS, STAGES, Registry,
+                                 resolve_sampler)
+from repro.core.samplers import QrelPool, RerankTopK, RunFileTopK
+from repro.core.suite import (SuiteResult, ValidationConfig, ValidationResult,
+                              ValidationSuite, ValidationTask)
+from repro.core.validator import AsyncValidator, ValidationLedger
+from repro.data import corpus as synthetic_ds
+from repro.models.biencoder import EncoderSpec
+
+DIM = 16
+VOCAB = 211
+
+
+def _toy_encode(params, tokens, mask):
+    emb = jnp.take(params["table"], tokens, axis=0)
+    m = mask.astype(emb.dtype)[..., None]
+    v = (emb * m).sum(1) / jnp.clip(m.sum(1), 1e-6)
+    return v / jnp.clip(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-6)
+
+
+def toy_spec():
+    return EncoderSpec(
+        name="toy", dim=DIM, encode_query=_toy_encode,
+        encode_passage=_toy_encode,
+        init=lambda rng: {"table": jax.random.normal(rng, (VOCAB, DIM))},
+        q_max_len=10, p_max_len=26)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return synthetic_ds.synthetic_retrieval_dataset(3, n_passages=160,
+                                                    n_queries=20, vocab=VOCAB)
+
+
+@pytest.fixture(scope="module")
+def baseline_run(ds):
+    return synthetic_ds.lexical_baseline_run(ds, k=30)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return toy_spec().init(jax.random.PRNGKey(0))
+
+
+def _legacy_pipeline(*args, **kw):
+    """Construct the deprecated shim with its warning silenced (so this
+    file survives -W error::DeprecationWarning)."""
+    from repro.core.pipeline import ValidationPipeline
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return ValidationPipeline(*args, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_registry_decorator_get_and_names():
+    reg = Registry("widget")
+
+    @reg.register("alpha")
+    def make_alpha():
+        return "a"
+
+    reg.register("beta", lambda: "b")
+    assert reg.names() == ["alpha", "beta"]
+    assert "alpha" in reg and len(reg) == 2
+    assert reg.get("alpha") is make_alpha
+
+
+def test_registry_unknown_name_lists_alternatives():
+    reg = Registry("widget")
+    reg.register("streaming", object())
+    reg.register("materialized", object())
+    with pytest.raises(ValueError) as ei:
+        reg.get("streming")
+    msg = str(ei.value)
+    assert "unknown widget 'streming'" in msg
+    assert "materialized, streaming" in msg          # sorted alternatives
+    assert "did you mean 'streaming'" in msg
+
+
+def test_registry_duplicate_and_overwrite():
+    reg = Registry("widget")
+    obj = object()
+    reg.register("x", obj)
+    reg.register("x", obj)                           # same object: idempotent
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("x", object())
+    reg.register("x", "replacement", overwrite=True)
+    assert reg.get("x") == "replacement"
+
+
+def test_builtin_registries_populated():
+    assert {"streaming", "materialized"} <= set(ENGINES.names())
+    assert {"topk_xla", "topk_pallas", "topk_sharded", "rerank",
+            "rerank_sharded"} <= set(STAGES.names())
+    assert {"full", "run_topk", "qrel_pool", "random",
+            "rerank_topk"} <= set(SAMPLERS.names())
+
+
+def test_resolve_sampler_name_instance_none():
+    assert resolve_sampler(None).name == "full"
+    assert resolve_sampler("run_topk", depth=7).name == "run_top7"
+    inst = RunFileTopK(depth=3)
+    assert resolve_sampler(inst) is inst
+    with pytest.raises(ValueError, match="unknown sampler"):
+        resolve_sampler("bm25ish")
+
+
+def test_unknown_engine_mode_impl_sampler_errors(ds, baseline_run):
+    spec = toy_spec()
+    t = ValidationTask("default", ds.corpus, ds.queries, ds.qrels)
+    with pytest.raises(ValueError, match="unknown engine 'streaminge'.*"
+                       "materialized, streaming"):
+        ValidationSuite(spec, [t], ValidationConfig(engine="streaminge")) \
+            .engine("default")
+    with pytest.raises(ValueError, match="unknown impl.*pallas, xla"):
+        ValidationSuite(spec, [t], ValidationConfig(impl="cuda")) \
+            .engine("default")
+    with pytest.raises(ValueError, match="unknown mode.*average_rank, "
+                       "rerank, retrieval"):
+        ValidationSuite(spec, [ValidationTask("default", ds.corpus,
+                                              ds.queries, ds.qrels,
+                                              mode="rarank")])
+    with pytest.raises(ValueError, match="unknown sampler"):
+        ValidationSuite(spec, [ValidationTask("default", ds.corpus,
+                                              ds.queries, ds.qrels,
+                                              sampler="nope")])
+
+
+def test_third_party_engine_registers_without_touching_internals(ds, params):
+    calls = {}
+
+    @ENGINES.register("test_null_engine")
+    def make_null(spec, store, vcfg):
+        calls["built"] = True
+
+        class Null:
+            name = "test_null_engine"
+
+            def run(self, params):
+                qid = store.query_ids[0]
+                return ({qid: [store.doc_ids[0]]}, {qid: [1.0]},
+                        {"total_s": 0.0})
+        return Null()
+
+    try:
+        suite = ValidationSuite(
+            toy_spec(), [ValidationTask("default", ds.corpus, ds.queries,
+                                        ds.qrels)],
+            ValidationConfig(engine="test_null_engine"))
+        res = suite.validate_params(params, step=1)
+        assert calls["built"]
+        assert res.tasks["default"].engine == "test_null_engine"
+    finally:
+        ENGINES._items.pop("test_null_engine", None)
+
+
+# ---------------------------------------------------------------------------
+# Suite ↔ legacy pipeline parity (bit for bit) + the deprecation shim
+# ---------------------------------------------------------------------------
+
+MODES_X_ENGINES = [(m, e) for m in ("retrieval", "rerank", "average_rank")
+                   for e in ("streaming", "materialized")]
+
+
+@pytest.mark.parametrize("mode,engine_name", MODES_X_ENGINES)
+def test_single_task_suite_matches_legacy_pipeline(ds, baseline_run, params,
+                                                   mode, engine_name):
+    spec = toy_spec()
+    sampler = {"retrieval": RunFileTopK(depth=5),
+               "rerank": RerankTopK(depth=8),
+               "average_rank": QrelPool(pool=8)}[mode]
+    vcfg = ValidationConfig(metrics=("MRR@10", "Recall@100"), mode=mode,
+                            k=50, batch_size=32, engine=engine_name)
+    suite = ValidationSuite(spec, [
+        ValidationTask("default", ds.corpus, ds.queries, ds.qrels, mode=mode,
+                       sampler=sampler, baseline_run=baseline_run,
+                       metrics=("MRR@10", "Recall@100"), k=50)], vcfg)
+    legacy = _legacy_pipeline(spec, ds.corpus, ds.queries, ds.qrels, vcfg,
+                              sampler=sampler, baseline_run=baseline_run)
+    # identical subsets, engines, raw run/scores, and metrics
+    assert legacy.doc_ids == suite.subsets["default"].doc_ids
+    run_s, scores_s, _ = suite.engine("default").run(params)
+    run_l, scores_l, _ = legacy.engine.run(params)
+    assert run_s == run_l
+    assert scores_s == scores_l
+    rs = suite.validate_params(params, step=3)
+    rl = legacy.validate_params(params, step=3)
+    assert rs.tasks["default"].metrics == rl.metrics
+    assert rs.tasks["default"].subset_size == rl.subset_size
+    assert rs.tasks["default"].engine == rl.engine == engine_name
+    # the flat view exposes both bare and task-qualified names
+    assert rs.metrics["MRR@10"] == rs.metrics["default:MRR@10"] \
+        == rl.metrics["MRR@10"]
+
+
+def test_shim_emits_deprecation_warning_exactly_once(ds):
+    import repro.core.pipeline as pipeline_mod
+    spec = toy_spec()
+    vcfg = ValidationConfig(batch_size=32)
+    pipeline_mod._warned = False
+    try:
+        with pytest.warns(DeprecationWarning, match="ValidationPipeline is "
+                          "deprecated"):
+            pipeline_mod.ValidationPipeline(spec, ds.corpus, ds.queries,
+                                            ds.qrels, vcfg)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            pipeline_mod.ValidationPipeline(spec, ds.corpus, ds.queries,
+                                            ds.qrels, vcfg)   # second: silent
+    finally:
+        pipeline_mod._warned = True
+
+
+def test_task_inherits_vcfg_mode_metrics_k(ds, baseline_run, params):
+    """A task that leaves mode/metrics/k unset inherits the suite config's
+    values (the documented single-task migration recipe states them once);
+    explicit task values still win."""
+    vcfg = ValidationConfig(metrics=("Recall@100",), k=10, batch_size=32)
+    suite = ValidationSuite(toy_spec(), [
+        ValidationTask("default", ds.corpus, ds.queries, ds.qrels)], vcfg)
+    res = suite.validate_params(params)
+    assert set(res.tasks["default"].metrics) == {"Recall@100"}
+    assert suite.tasks["default"].k == 10
+    override = ValidationSuite(toy_spec(), [
+        ValidationTask("default", ds.corpus, ds.queries, ds.qrels,
+                       metrics=("MRR@10",), k=5)], vcfg)
+    assert set(override.validate_params(params)
+               .tasks["default"].metrics) == {"MRR@10"}
+    # vcfg.mode inherits too (average_rank appends its metric)
+    ar = ValidationSuite(toy_spec(), [
+        ValidationTask("default", ds.corpus, ds.queries, ds.qrels,
+                       sampler=QrelPool(pool=8), baseline_run=baseline_run)],
+        ValidationConfig(metrics=("MRR@10",), mode="average_rank",
+                         batch_size=32))
+    assert "AverageRank" in ar.validate_params(params) \
+        .tasks["default"].metrics
+
+
+def test_build_engines_fails_fast_on_config_errors(ds):
+    suite = ValidationSuite(toy_spec(), [
+        ValidationTask("default", ds.corpus, ds.queries, ds.qrels)],
+        ValidationConfig(batch_size=32, staging_depth=0))
+    with pytest.raises(ValueError, match="staging_depth"):
+        suite.build_engines()
+
+
+def test_observe_rows_skips_partial_steps_like_rehydrate():
+    from repro.control import CheckpointSelector, SelectionConfig
+    sel = CheckpointSelector(SelectionConfig(
+        metric="0.5*dev:MRR@10 + 0.5*heldout:MRR@10"))
+    sel.observe_rows([
+        {"step": 1, "task": "dev", "metrics": {"MRR@10": 0.2}},
+        {"step": 1, "task": "heldout", "metrics": {"MRR@10": 0.4}},
+        {"step": 2, "task": "dev", "metrics": {"MRR@10": 0.9}},  # partial
+    ])
+    assert sel.best_step == 1                      # partial step 2 skipped
+
+
+def test_suite_rejects_bad_task_sets(ds):
+    t = lambda name: ValidationTask(name, ds.corpus, ds.queries, ds.qrels)
+    with pytest.raises(ValueError, match="duplicate task name"):
+        ValidationSuite(toy_spec(), [t("a"), t("a")])
+    with pytest.raises(ValueError, match="at least one task"):
+        ValidationSuite(toy_spec(), [])
+    with pytest.raises(ValueError, match="must not contain ':'"):
+        t("a:b")
+    with pytest.raises(ValueError, match="unknown task"):
+        ValidationSuite(toy_spec(), [t("a")]).engine("b")
+
+
+# ---------------------------------------------------------------------------
+# Shared TokenStore cache
+# ---------------------------------------------------------------------------
+
+def _query_split(ds):
+    qids = sorted(ds.queries)
+    cut = len(qids) // 2
+    mk = lambda ids: ({q: ds.queries[q] for q in ids},
+                      {q: ds.qrels[q] for q in ids if q in ds.qrels})
+    return mk(qids[:cut]), mk(qids[cut:])
+
+
+def test_corpus_sharing_tasks_reuse_one_token_store(ds, params):
+    (q1, r1), (q2, r2) = _query_split(ds)
+    suite = ValidationSuite(toy_spec(), [
+        ValidationTask("dev", ds.corpus, q1, r1),
+        ValidationTask("heldout", ds.corpus, q2, r2),
+    ], ValidationConfig(batch_size=32))
+    e1, e2 = suite.engine("dev"), suite.engine("heldout")
+    assert suite.store_builds == 1
+    assert e1.doc_store is e2.doc_store            # literally one store
+    assert e1 is not e2                            # but per-task engines
+    res = suite.validate_params(params, step=1)
+    assert set(res.tasks) == {"dev", "heldout"}
+
+
+def test_distinct_corpora_build_distinct_mmap_stores(ds, tmp_path, params):
+    (q1, r1), (q2, r2) = _query_split(ds)
+    half = dict(list(ds.corpus.items())[:80])
+    suite = ValidationSuite(toy_spec(), [
+        ValidationTask("full", ds.corpus, q1, r1),
+        ValidationTask("full2", ds.corpus, q2, r2),     # shares with "full"
+        ValidationTask("half", half, q2, r2),           # different corpus
+    ], ValidationConfig(batch_size=32, token_backing="mmap",
+                        mmap_dir=str(tmp_path)))
+    # build in REVERSE order: cache-dir indices follow task DECLARATION
+    # order, so a different lazy access order cannot remap corpora onto
+    # each other's cache dirs (which would defeat the cache every run)
+    for name in reversed(suite.task_names):
+        suite.engine(name)
+    assert suite.store_builds == 2
+    # first-declared store keeps the historical dir name; second numbered
+    m0 = json.load(open(tmp_path / "corpus_tokens" / "store_meta.json"))
+    m1 = json.load(open(tmp_path / "corpus_tokens_1" / "store_meta.json"))
+    assert m0["n_texts"] == len(ds.corpus)         # "full" corpus -> index 0
+    assert m1["n_texts"] == 80                     # "half" corpus -> index 1
+    assert m0["fingerprint"] != m1["fingerprint"]
+    # a second suite touching tasks in yet another order reuses both caches
+    suite2 = ValidationSuite(toy_spec(), [
+        ValidationTask("full", ds.corpus, q1, r1),
+        ValidationTask("full2", ds.corpus, q2, r2),
+        ValidationTask("half", half, q2, r2),
+    ], ValidationConfig(batch_size=32, token_backing="mmap",
+                        mmap_dir=str(tmp_path)))
+    suite2.engine("half"), suite2.engine("full")
+    assert suite2.engine("half").doc_store.reused
+    assert suite2.engine("full").doc_store.reused
+
+
+# ---------------------------------------------------------------------------
+# Ledger schema v2: (step, task) rows, v1 migration, crash tolerance
+# ---------------------------------------------------------------------------
+
+def _res(step, task="default", mrr=0.5):
+    return ValidationResult(step=step, metrics={"MRR@10": mrr},
+                            timings={"total_s": 0.01}, subset_size=4,
+                            engine="streaming", task=task)
+
+
+def test_ledger_v2_rows_keyed_step_task(tmp_path):
+    path = str(tmp_path / "ledger.jsonl")
+    led = ValidationLedger(path, expected_tasks=("dev", "heldout"))
+    led.record(SuiteResult(step=10, tasks={"dev": _res(10, "dev", 0.4),
+                                           "heldout": _res(10, "heldout",
+                                                           0.6)}))
+    assert led.completed(10) and 10 in led
+    assert led.tasks_for(10) == ["dev", "heldout"]
+    with open(path) as f:
+        recs = [json.loads(l) for l in f]
+    assert [(r["step"], r["task"]) for r in recs] == [(10, "dev"),
+                                                      (10, "heldout")]
+    # partial step (crash between task rows): not completed -> re-validated
+    led.record(_res(20, "dev"))
+    assert not led.completed(20) and 20 not in led
+    assert led.validated_steps == [10]
+    led2 = ValidationLedger(path, expected_tasks=("dev", "heldout"))
+    assert led2.validated_steps == [10] and not led2.completed(20)
+
+
+def test_ledger_v1_rows_migrate_to_default_task(tmp_path):
+    path = str(tmp_path / "ledger.jsonl")
+    with open(path, "w") as f:                     # a pre-suite (v1) ledger
+        for step, mrr in ((10, 0.3), (20, 0.7)):
+            f.write(json.dumps({"step": step, "metrics": {"MRR@10": mrr},
+                                "timings": {"total_s": 1.0},
+                                "subset_size": 9}) + "\n")
+    led = ValidationLedger(path, expected_tasks=("default",))
+    assert led.validated_steps == [10, 20]
+    assert led.tasks_for(10) == ["default"]
+    assert all(r["task"] == "default" for r in led.rows())
+
+
+def test_ledger_v1_replays_identically_to_v2_default(tmp_path):
+    """The same observations through a v1 ledger and a v2 default-task
+    ledger must produce byte-identical control decisions."""
+    v1 = [{"step": s, "metrics": {"MRR@10": m}}
+          for s, m in ((1, .5), (2, .6), (3, .55), (4, .58))]
+    v2 = [{"step": s, "task": "default", "metrics": {"MRR@10": m}}
+          for s, m in ((1, .5), (2, .6), (3, .55), (4, .58))]
+    cfg = ControlConfig(metric="MRR@10", early_stop=True, patience=2)
+    d1 = replay_ledger(v1, cfg).events.decisions()
+    d2 = replay_ledger(v2, cfg).events.decisions()
+    assert d1 == d2
+    # and the task-qualified spec sees the same series
+    cfgq = ControlConfig(metric="default:MRR@10", early_stop=True, patience=2)
+    dq = replay_ledger(v2, cfgq).events.decisions()
+    assert [(e.kind, e.step) for e in dq] == [(e.kind, e.step) for e in d1]
+
+
+def test_ledger_tolerates_torn_final_line(tmp_path):
+    path = str(tmp_path / "ledger.jsonl")
+    led = ValidationLedger(path)
+    led.record(_res(10))
+    led.record(_res(20))
+    whole = open(path).read()
+    with open(path, "w") as f:                     # crash mid-append
+        f.write(whole + '{"step": 30, "metrics": {"MRR@')
+    led2 = ValidationLedger(path, expected_tasks=("default",))
+    assert led2.validated_steps == [10, 20]        # torn row dropped
+    assert 30 not in led2                          # -> will re-validate
+    # loading is read-only: an offline audit must never mutate a (possibly
+    # live) ledger; only the owning writer repairs the tail, on append
+    assert open(path).read() == whole + '{"step": 30, "metrics": {"MRR@'
+    led2.record(_res(30))                          # truncates, then appends
+    assert ValidationLedger(path).validated_steps == [10, 20, 30]
+
+
+def test_ledger_raises_on_mid_file_corruption(tmp_path):
+    path = str(tmp_path / "ledger.jsonl")
+    with open(path, "w") as f:
+        f.write('{"step": 1, "metrics": {}}\n')
+        f.write('{"step": 2, "metr\n')             # torn NON-final line
+        f.write('{"step": 3, "metrics": {}}\n')
+    with pytest.raises(ValueError, match="corrupt ledger row at .*:2"):
+        ValidationLedger(path)
+
+
+# ---------------------------------------------------------------------------
+# Composite metric specs
+# ---------------------------------------------------------------------------
+
+def test_metric_spec_parse_and_value():
+    flat = {"MRR@10": 0.5, "dev:MRR@10": 0.4, "heldout:MRR@10": 0.8}
+    assert MetricSpec.parse("MRR@10").value(flat) == 0.5
+    assert MetricSpec.parse("dev:MRR@10").value(flat) == 0.4
+    agg = MetricSpec.parse("0.25*dev:MRR@10 + 0.75*heldout:MRR@10")
+    assert agg.composite and agg.keys() == ["dev:MRR@10", "heldout:MRR@10"]
+    assert agg.value(flat) == pytest.approx(0.25 * 0.4 + 0.75 * 0.8)
+    # exact-key override wins (the plane's EMA smoothing bridge)
+    assert agg.value({**flat, agg.raw: 0.123}) == 0.123
+    with pytest.raises(KeyError, match="'dev:nDCG@10'.*not in"):
+        MetricSpec.parse("dev:nDCG@10").value(flat)
+    for bad in ("", "  ", "x+", "a**b", "q*MRR@10"):
+        with pytest.raises(ValueError):
+            MetricSpec.parse(bad)
+
+
+def test_metric_mode_inference():
+    assert metric_mode("MRR@10") == "max"
+    assert metric_mode("AverageRank") == "min"
+    assert metric_mode("dev:AverageRank + heldout:AverageRank") == "min"
+    assert metric_mode("0.5*dev:AverageRank + 0.5*heldout:MRR@10") == "max"
+
+
+def test_flatten_rows_groups_consecutive_steps():
+    rows = [
+        {"step": 1, "metrics": {"MRR@10": 0.1}},                  # v1 row
+        {"step": 2, "task": "dev", "metrics": {"MRR@10": 0.2}},
+        {"step": 2, "task": "heldout", "metrics": {"MRR@10": 0.3}},
+        {"step": 1, "task": "dev", "metrics": {"MRR@10": 0.4}},   # revisit
+    ]
+    flat = flatten_rows(rows)
+    assert [s for s, _ in flat] == [1, 2, 1]       # revisit stays separate
+    assert flat[0][1] == {"MRR@10": 0.1, "default:MRR@10": 0.1}
+    assert flat[1][1] == {"dev:MRR@10": 0.2, "heldout:MRR@10": 0.3}
+    # expected_tasks drops partial groups even when their rows would
+    # satisfy a spec (the online controller never observed them)
+    flat = flatten_rows(rows, expected_tasks=("dev", "heldout"))
+    assert [s for s, _ in flat] == [2]
+
+
+def test_rehydrate_drops_spec_satisfying_partial_steps():
+    """A crash-torn step whose SURVIVING rows happen to satisfy the control
+    spec must still be dropped when the task set is known — otherwise the
+    step is observed twice (rehydrate + its re-validation) and EMA/patience
+    diverge from a crash-free run."""
+    rows = [
+        {"step": 1, "task": "a", "metrics": {"MRR@10": 0.2}},
+        {"step": 1, "task": "b", "metrics": {"MRR@10": 0.2}},
+        {"step": 2, "task": "a", "metrics": {"MRR@10": 0.9}},  # torn: no b
+    ]
+    cfg = ControlConfig(metric="a:MRR@10", ema=0.5)
+    plane = ControlPlane(None, cfg)
+    assert plane.rehydrate(rows, expected_tasks=("a", "b")) == 1
+    assert plane.selector.best_step == 1           # partial step 2 unseen
+    offline = replay_ledger(rows, cfg, expected_tasks=("a", "b"))
+    assert offline.selector.best_step == 1
+
+
+def test_task_named_sampler_honours_sampler_depth(ds, baseline_run):
+    suite = ValidationSuite(toy_spec(), [
+        ValidationTask("default", ds.corpus, ds.queries, ds.qrels,
+                       sampler="run_topk", sampler_depth=5,
+                       baseline_run=baseline_run)],
+        ValidationConfig(batch_size=32))
+    ref = RunFileTopK(depth=5).sample(list(ds.corpus), baseline_run,
+                                      ds.qrels)
+    assert suite.subsets["default"].doc_ids == ref.doc_ids
+    assert suite.sampler_names["default"] == "run_top5"
+
+
+def test_logger_schema_has_no_default_duplicates(tmp_path, ds, params):
+    from repro.core.reporting import MemoryLogger
+    root = str(tmp_path / "ck")
+    ckpt.save(root, 1, {"params": params})
+    suite = ValidationSuite(toy_spec(), [
+        ValidationTask("default", ds.corpus, ds.queries, ds.qrels)],
+        ValidationConfig(metrics=("MRR@10",), batch_size=32))
+    logger = MemoryLogger()
+    v = AsyncValidator(root, suite, logger=logger)
+    v.validate_pending()
+    _, logged = logger.records[0]
+    assert "MRR@10" in logged                      # legacy column intact
+    assert not any(k.startswith("default:") for k in logged)
+    # the control plane still sees both spellings
+    assert "default:MRR@10" in v.results[0].metrics
+
+
+# ---------------------------------------------------------------------------
+# Multi-task end to end: AsyncValidator + control plane on a composite spec
+# ---------------------------------------------------------------------------
+
+def test_multi_task_async_validation_end_to_end(tmp_path, ds, params):
+    (q1, r1), (q2, r2) = _query_split(ds)
+    spec = toy_spec()
+    root = str(tmp_path / "ck")
+    # 5 checkpoints with IDENTICAL weights: the composite metric plateaus
+    # immediately, so patience=2 stops at the 3rd evaluation.
+    for s in (10, 20, 30, 40, 50):
+        ckpt.save(root, s, {"params": params})
+
+    suite = ValidationSuite(spec, [
+        ValidationTask("dev", ds.corpus, q1, r1, metrics=("MRR@10",)),
+        ValidationTask("heldout", ds.corpus, q2, r2, metrics=("MRR@10",)),
+    ], ValidationConfig(batch_size=32))
+    cmetric = "0.5*dev:MRR@10 + 0.5*heldout:MRR@10"
+    stop_path = str(tmp_path / "STOP")
+    control = ControlPlane(root,
+                           ControlConfig(metric=cmetric, mode="max",
+                                         keep_top_k=2, early_stop=True,
+                                         patience=2),
+                           stop_path=stop_path,
+                           event_path=str(tmp_path / "control.jsonl"))
+    ledger_path = str(tmp_path / "ledger.jsonl")
+    v = AsyncValidator(root, suite, controller=control,
+                       ledger_path=ledger_path)
+    n = v.validate_pending()
+    assert n == 5 and not v.errors
+    # per-task rows keyed (step, task), two per step, in pass order
+    with open(ledger_path) as f:
+        recs = [json.loads(l) for l in f if l.strip()]
+    assert [(r["step"], r["task"]) for r in recs[:4]] == \
+        [(10, "dev"), (10, "heldout"), (20, "dev"), (20, "heldout")]
+    assert v.ledger.validated_steps == [10, 20, 30, 40, 50]
+    # composite early stop: plateau after 2 non-improving evals -> marker
+    assert control.stopped and control.earlystop.reason == "plateau"
+    assert os.path.exists(stop_path)
+    # quality-aware GC on the composite metric: top-2 (ties -> later step)
+    assert ckpt.list_steps(root) == [40, 50]
+    # offline replay over the per-task ledger re-derives the decisions
+    offline = replay_ledger(v.ledger.rows(), control.cfg)
+    assert offline.events.decisions() == control.events.decisions()
+    # a restarted validator over the same ledger re-validates nothing
+    suite2 = ValidationSuite(spec, [
+        ValidationTask("dev", ds.corpus, q1, r1, metrics=("MRR@10",)),
+        ValidationTask("heldout", ds.corpus, q2, r2, metrics=("MRR@10",)),
+    ], ValidationConfig(batch_size=32))
+    v2 = AsyncValidator(root, suite2, ledger_path=ledger_path)
+    assert v2.validate_pending() == 0
+
+
+def test_partial_step_revalidates_missing_tasks(tmp_path, ds, params):
+    (q1, r1), (q2, r2) = _query_split(ds)
+    root = str(tmp_path / "ck")
+    ckpt.save(root, 7, {"params": params})
+    ledger_path = str(tmp_path / "ledger.jsonl")
+    with open(ledger_path, "w") as f:              # crash left only one task
+        f.write(json.dumps({"step": 7, "task": "dev",
+                            "metrics": {"MRR@10": 0.1}}) + "\n")
+    suite = ValidationSuite(toy_spec(), [
+        ValidationTask("dev", ds.corpus, q1, r1, metrics=("MRR@10",)),
+        ValidationTask("heldout", ds.corpus, q2, r2, metrics=("MRR@10",)),
+    ], ValidationConfig(batch_size=32))
+    v = AsyncValidator(root, suite, ledger_path=ledger_path)
+    assert v.validate_pending() == 1               # step 7 re-validated
+    assert v.ledger.tasks_for(7) == ["dev", "heldout"]
+
+
+def test_engine_override_rejected_on_multi_task_suite(ds, params):
+    """A single injected engine serves exactly one task's data; silently
+    scoring every task with it would ledger garbage for the others."""
+    (q1, r1), (q2, r2) = _query_split(ds)
+    suite = ValidationSuite(toy_spec(), [
+        ValidationTask("dev", ds.corpus, q1, r1),
+        ValidationTask("heldout", ds.corpus, q2, r2),
+    ], ValidationConfig(batch_size=32))
+
+    class Fake:
+        name = "fake"
+
+        def run(self, params):
+            return {}, {}, {"total_s": 0.0}
+
+    with pytest.raises(ValueError, match="multi-task suite"):
+        suite.validate_params(params, engine=Fake())
+    # per-task injection is the supported spelling
+    suite2 = ValidationSuite(toy_spec(), [
+        ValidationTask("dev", ds.corpus, q1, r1),
+        ValidationTask("heldout", ds.corpus, q2, r2),
+    ], ValidationConfig(batch_size=32),
+        engines={"dev": Fake(), "heldout": Fake()})
+    res = suite2.validate_params(params)
+    assert {r.engine for r in res.tasks.values()} == {"fake"}
+
+
+def test_registered_engine_opts_into_shared_stores(ds, params):
+    """Third-party engines get the suite's TokenStore sharing by declaring
+    `uses_token_stores = True` on their factory — no internal edits."""
+    from repro.core.engine import make_streaming_engine
+
+    def make_alias(spec, store, vcfg):
+        return make_streaming_engine(spec, store, vcfg)
+    make_alias.uses_token_stores = True
+    ENGINES.register("test_alias_streaming", make_alias)
+    try:
+        (q1, r1), (q2, r2) = _query_split(ds)
+        suite = ValidationSuite(toy_spec(), [
+            ValidationTask("dev", ds.corpus, q1, r1),
+            ValidationTask("heldout", ds.corpus, q2, r2),
+        ], ValidationConfig(batch_size=32, engine="test_alias_streaming"))
+        e1, e2 = suite.engine("dev"), suite.engine("heldout")
+        assert suite.store_builds == 1
+        assert e1.doc_store is e2.doc_store
+    finally:
+        ENGINES._items.pop("test_alias_streaming", None)
+
+
+def test_rehydrate_skips_partial_step_and_rerecord_regroups(tmp_path, ds,
+                                                            params):
+    """A crash between a suite's task rows must not poison restart: the
+    composite-spec selector skips the partial observation, and once the
+    step re-validates its rows form one fresh CONSECUTIVE block so replay
+    sees a single complete observation."""
+    (q1, r1), (q2, r2) = _query_split(ds)
+    root = str(tmp_path / "ck")
+    ckpt.save(root, 7, {"params": params})
+    ledger_path = str(tmp_path / "ledger.jsonl")
+    with open(ledger_path, "w") as f:              # crash left only one task
+        f.write(json.dumps({"step": 5, "task": "dev",
+                            "metrics": {"MRR@10": 0.1}}) + "\n")
+    suite = ValidationSuite(toy_spec(), [
+        ValidationTask("dev", ds.corpus, q1, r1, metrics=("MRR@10",)),
+        ValidationTask("heldout", ds.corpus, q2, r2, metrics=("MRR@10",)),
+    ], ValidationConfig(batch_size=32))
+    cfg = ControlConfig(metric="0.5*dev:MRR@10 + 0.5*heldout:MRR@10",
+                        keep_top_k=2)
+    control = ControlPlane(root, cfg,
+                           event_path=str(tmp_path / "control.jsonl"))
+    v = AsyncValidator(root, suite, controller=control,
+                       ledger_path=ledger_path)
+    # startup rehydrate over the poisoned ledger must not raise, and must
+    # observe nothing (the partial step lacks the spec's heldout metric)
+    assert control.rehydrate(v.ledger.rows()) == 0
+    # ckpt 5 is gone from disk, but the partial step is re-recordable: a
+    # fresh suite pass over it regroups the rows at the tail
+    res = suite.validate_params(params, step=5)
+    v.ledger.record(res)
+    rows = v.ledger.rows()
+    assert [(r["step"], r["task"]) for r in rows] == [(5, "dev"),
+                                                      (5, "heldout")]
+    # and offline replay on the repaired ledger sees one full observation
+    offline = replay_ledger(rows, cfg)
+    assert offline.selector.best_step == 5
+
+
+def test_control_event_log_tolerates_torn_final_line(tmp_path):
+    from repro.control import ControlEventLog
+    path = str(tmp_path / "events.jsonl")
+    log = ControlEventLog(path)
+    log.emit("select", 1, value=0.5)
+    log.emit("select", 2, value=0.6)
+    whole = open(path).read()
+    with open(path, "w") as f:                     # crash mid-append
+        f.write(whole + '{"seq": 2, "kind": "sel')
+    log2 = ControlEventLog(path)
+    assert [e.step for e in log2.events()] == [1, 2]
+    log2.emit("select", 3, value=0.7)              # clean line, not glued
+    assert [e.step for e in ControlEventLog(path).events()] == [1, 2, 3]
+    with open(path, "w") as f:                     # mid-file corruption
+        f.write('{"seq": 0, "kind"\n' + whole)
+    with pytest.raises(ValueError, match="corrupt control event"):
+        ControlEventLog(path)
+
+
+def test_validate_step_ignores_max_num_valid_cap(tmp_path, ds, params):
+    """The soup-scoring path: an explicit validate_step must run even when
+    the watcher-driven budget is exhausted."""
+    root = str(tmp_path / "ck")
+    for s in (1, 2, 3):
+        ckpt.save(root, s, {"params": params})
+    suite = ValidationSuite(toy_spec(), [
+        ValidationTask("default", ds.corpus, ds.queries, ds.qrels,
+                       metrics=("MRR@10",))], ValidationConfig(batch_size=32))
+    v = AsyncValidator(root, suite, max_num_valid=2)
+    v.validate_pending()
+    assert len(v.results) == 2                     # budget hit
+    assert v.validate_step(3) == 1                 # explicit request still runs
+    assert 3 in v.ledger.validated_steps
+
+
+def test_write_runs_override_protects_real_run_files(tmp_path, ds,
+                                                     baseline_run, params):
+    outdir = str(tmp_path / "runs")
+    suite = ValidationSuite(toy_spec(), [
+        ValidationTask("default", ds.corpus, ds.queries, ds.qrels,
+                       sampler=RunFileTopK(depth=5),
+                       baseline_run=baseline_run, metrics=("MRR@10",))],
+        ValidationConfig(batch_size=32, write_run=True, output_dir=outdir))
+    suite.validate_params(params, step=0)
+    trec = os.path.join(outdir, "asyncval_step0.trec")
+    before = open(trec).read()
+    # a scoring pass (ensemble soup candidate) must not touch run files
+    other = toy_spec().init(jax.random.PRNGKey(9))
+    suite.validate_params(other, write_runs=False)
+    assert open(trec).read() == before
+
+
+# ---------------------------------------------------------------------------
+# TokenStore chunk-hash manifest (O(changed chunks) full-fidelity rebuild)
+# ---------------------------------------------------------------------------
+
+def _texts(n, seed=0, length=6):
+    rng = np.random.default_rng(seed)
+    return [list(map(int, rng.integers(1, 50, size=length))) for _ in range(n)]
+
+
+def test_full_fingerprint_incremental_rebuild(tmp_path):
+    cache = str(tmp_path / "store")
+    texts = _texts(40)
+    st = E.TokenStore.build(texts, max_len=8, chunk=8, backing="mmap",
+                            cache_dir=cache, fingerprint="full")
+    assert st.n_chunks == 5 and st.rebuilt_chunks == 5 and not st.reused
+    assert os.path.exists(os.path.join(cache, "chunk_hashes.json"))
+    # clean rebuild: nothing re-padded
+    st2 = E.TokenStore.build(texts, max_len=8, chunk=8, backing="mmap",
+                             cache_dir=cache, fingerprint="full")
+    assert st2.reused and st2.rebuilt_chunks == 0
+    # mutate ONE middle text -> exactly its chunk rebuilds
+    texts[19] = [44, 45, 46]                       # chunk 2
+    st3 = E.TokenStore.build(texts, max_len=8, chunk=8, backing="mmap",
+                             cache_dir=cache, fingerprint="full")
+    assert not st3.reused and st3.rebuilt_chunks == 1
+    ref = E.TokenStore.build(texts, max_len=8, chunk=8)   # memory reference
+    assert np.array_equal(np.asarray(st3.tokens), ref.tokens)
+    assert np.array_equal(np.asarray(st3.mask), ref.mask)
+    # and the repaired cache is a clean hit again
+    st4 = E.TokenStore.build(texts, max_len=8, chunk=8, backing="mmap",
+                             cache_dir=cache, fingerprint="full")
+    assert st4.reused and st4.rebuilt_chunks == 0
+
+
+def test_fast_rebuild_invalidates_stale_manifest(tmp_path):
+    """A fast-mode rebuild rewrites the bins without a manifest; leaving the
+    old manifest behind could later bless stale chunks, so it must go."""
+    cache = str(tmp_path / "store")
+    texts = _texts(24, seed=1)
+    E.TokenStore.build(texts, max_len=8, chunk=8, backing="mmap",
+                       cache_dir=cache, fingerprint="full")
+    manifest = os.path.join(cache, "chunk_hashes.json")
+    assert os.path.exists(manifest)
+    texts[0] = [9, 9, 9]                            # edge change: fast sees it
+    st = E.TokenStore.build(texts, max_len=8, chunk=8, backing="mmap",
+                            cache_dir=cache, fingerprint="fast")
+    assert st.rebuilt_chunks == st.n_chunks
+    assert not os.path.exists(manifest)
+
+
+def test_geometry_change_forces_full_rebuild(tmp_path):
+    cache = str(tmp_path / "store")
+    texts = _texts(32, seed=2)
+    E.TokenStore.build(texts, max_len=8, chunk=8, backing="mmap",
+                       cache_dir=cache, fingerprint="full")
+    st = E.TokenStore.build(texts, max_len=8, chunk=16, backing="mmap",
+                            cache_dir=cache, fingerprint="full")
+    assert not st.reused and st.rebuilt_chunks == st.n_chunks == 2
+
+
+# ---------------------------------------------------------------------------
+# CLI: registry-validated flags
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("flag,value,kind", [
+    ("--engine", "streaminge", "engine"), ("--impl", "cuda", "impl"),
+    ("--mode", "rarank", "mode"), ("--sampler", "bm25", "sampler"),
+])
+def test_cli_rejects_unknown_component_names_at_parse_time(capsys, flag,
+                                                           value, kind):
+    """Unknown component names fail through the registry immediately after
+    parsing — before any corpus IO (the paths here do not exist) — with
+    the registered alternatives listed."""
+    from repro.core.cli import main
+    with pytest.raises(SystemExit) as ei:
+        main(["--query_file", "q.jsonl", "--candidate_dir", "c",
+              "--ckpts_dir", "ck", "--qrel_file", "qr.txt", flag, value])
+    assert ei.value.code == 2                      # usage error
+    err = capsys.readouterr().err
+    assert f"unknown {kind} '{value}'" in err
+
+
+def test_cli_rejects_run_sampler_without_run_file(tmp_path, capsys):
+    """--sampler run_topk (or rerank mode) without --run_file must error at
+    parse time, not AttributeError after the corpus loaded (paths here do
+    not exist, so reaching IO would raise something else)."""
+    from repro.core.cli import main
+    base = ["--query_file", "q.jsonl", "--candidate_dir",
+            str(tmp_path / "nope"), "--ckpts_dir", str(tmp_path / "ck"),
+            "--qrel_file", str(tmp_path / "none.txt")]
+    for extra in (["--sampler", "run_topk"], ["--mode", "rerank"]):
+        with pytest.raises(SystemExit) as ei:
+            main(base + extra)
+        assert ei.value.code == 2
+        assert "run_file" in capsys.readouterr().err
+    # samplers whose --depth needs no run file pass the parse-time checks
+    # (the nonexistent query file is the first thing touched after them)
+    with pytest.raises(FileNotFoundError):
+        main(base + ["--sampler", "random", "--depth", "50"])
+
+
+def test_cli_rejects_alien_task_metric_before_any_io(tmp_path, capsys):
+    """A composite --early_stop_metric naming a task this run does not
+    validate must fail at parse time, before any corpus file is touched
+    (the paths here do not exist)."""
+    from repro.core.cli import main
+    with pytest.raises(SystemExit) as ei:
+        main(["--query_file", "q.jsonl", "--candidate_dir",
+              str(tmp_path / "nope"), "--ckpts_dir", str(tmp_path / "ck"),
+              "--qrel_file", str(tmp_path / "none.txt"),
+              "--metrics", "MRR@10", "--early_stop",
+              "--early_stop_metric", "0.5*dev:MRR@10 + 0.5*MRR@10"])
+    assert ei.value.code == 2
+    assert "dev:MRR@10" in capsys.readouterr().err
