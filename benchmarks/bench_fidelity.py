@@ -61,6 +61,49 @@ def run(corpus_size: int = 3000, n_queries: int = 80, n_ckpts: int = 8,
     return out
 
 
+def run_precision(corpus_size: int = 2000, n_queries: int = 60,
+                  n_ckpts: int = 6, steps_per_ckpt: int = 10,
+                  depths=(10, 100), seed: int = 0):
+    """Precision x subset-depth fidelity sweep (PR-6): does quantized
+    scoring preserve the checkpoint-ranking signal the way subset sampling
+    does?  Every (score_dtype, depth) cell's curve is rank-correlated
+    against the f32 FULL-corpus run — the two fidelity axes (data subset,
+    compute precision) land in the same report so their costs compose
+    visibly."""
+    ds = corpus_lib.synthetic_retrieval_dataset(
+        seed, n_passages=corpus_size, n_queries=n_queries, n_topics=60,
+        vocab=1009, topic_frac_p=0.35, topic_frac_q=0.5)
+    strong = corpus_lib.oracle_noisy_baseline_run(ds, noise=0.3,
+                                                  overlap_weight=0.75,
+                                                  k=max(depths))
+    spec = toy_spec(ds.vocab)
+    _, snapshots = train_toy_dr(ds, spec, steps=n_ckpts * steps_per_ckpt,
+                                snapshot_every=steps_per_ckpt, seed=seed,
+                                lr=0.04)
+
+    def curve(score_dtype, sampler, baseline):
+        vcfg = ValidationConfig(metrics=("MRR@10",), k=100, batch_size=128,
+                                score_dtype=score_dtype)
+        pipe = ValidationPipeline(spec, ds.corpus, ds.queries, ds.qrels,
+                                  vcfg, sampler=sampler,
+                                  baseline_run=baseline)
+        return ([pipe.validate_params(p, step=s).metrics["MRR@10"]
+                 for s, p in snapshots], pipe.subset.size)
+
+    full_f32, full_size = curve("f32", FullCorpus(), None)
+    out = {"f32_full": {"curve": full_f32, "size": full_size,
+                        "spearman": 1.0, "kendall_tau": 1.0,
+                        "mean_delta": 0.0}}
+    for dt in ("f32", "bf16", "int8"):
+        cells = [("full", FullCorpus(), None)] if dt != "f32" else []
+        cells += [(f"top{d}", RunFileTopK(depth=d), strong) for d in depths]
+        for label, sampler, baseline in cells:
+            c, size = curve(dt, sampler, baseline)
+            out[f"{dt}_{label}"] = {"curve": c, "size": size,
+                                    **fidelity_report(full_f32, c)}
+    return out
+
+
 def main():
     out = run()
     full = out["full"]["curve"]
@@ -87,6 +130,25 @@ def main():
     # mismatch makes its subsets miss hard negatives the strong run keeps
     assert strong100["mean_delta"] < weak100["mean_delta"] - 1e-3, \
         "stronger baseline subsets track the full curve closer"
+
+    # -- precision x subset-depth sweep (PR-6) -----------------------------
+    pout = run_precision()
+    print("name,cell,size,spearman,kendall,mean_delta")
+    for key, rec in pout.items():
+        print(f"fidelity_precision,{key},{rec['size']},"
+              f"{rec['spearman']:.3f},{rec['kendall_tau']:.3f},"
+              f"{rec['mean_delta']:.4f}")
+    # narrow precision on the FULL corpus must preserve the checkpoint
+    # ranking almost perfectly — precision loss is far gentler than subset
+    # loss, which is the whole point of offering it as a cheaper knob
+    for dt in ("bf16", "int8"):
+        assert pout[f"{dt}_full"]["spearman"] >= 0.9, \
+            f"{dt} full-corpus curve must rank-track the f32 run " \
+            f"(spearman={pout[f'{dt}_full']['spearman']:.3f})"
+        # composed axes: quantized subset validation still preserves trend
+        assert pout[f"{dt}_top100"]["spearman"] >= 0.7, \
+            f"{dt} top-100 subset curve must preserve the trend " \
+            f"(spearman={pout[f'{dt}_top100']['spearman']:.3f})"
     return out
 
 

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.precision import itemsize
 from repro.core.retrieval import topk_exact
 
 
@@ -50,6 +51,32 @@ def run(Q: int = 64, D: int = 128, k: int = 100,
     return rows
 
 
+def run_precision(Q: int = 64, D: int = 128, k: int = 100,
+                  N: int = 50_000, block: int = 4096, seed: int = 0):
+    """Precision sweep at the default bench point: wall time, throughput,
+    and the analytic corpus-embedding footprint per ``score_dtype``.
+
+    The byte figure is analytic (N x D x itemsize) — it is what the kernel
+    streams from HBM per scan on an accelerator, and it is exact regardless
+    of CPU-CI wall-clock noise; the PR-6 acceptance gate (bf16 at >= 1.5x
+    throughput OR >= 2x embedding-byte shrink vs f32) therefore always has
+    the deterministic arm available.
+    """
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(Q, D)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(N, D)), jnp.float32)
+    rows = []
+    for dt in ("f32", "bf16", "int8"):
+        best = _bench(topk_exact, q, c, k=k, block=block, score_dtype=dt)
+        flops = 2.0 * Q * N * D
+        emb_bytes = N * D * itemsize(dt)
+        rows.append({
+            "score_dtype": dt, "N": N, "block": block, "ms": best * 1e3,
+            "gflops_s": flops / best / 1e9, "emb_bytes": emb_bytes,
+        })
+    return rows
+
+
 def main():
     rows = run()
     print("name,N,block,ms,gflops_s,gbytes_s,arith_intensity")
@@ -57,6 +84,21 @@ def main():
         print(f"mips_kernel,{r['N']},{r['block']},{r['ms']:.2f},"
               f"{r['gflops_s']:.2f},{r['gbytes_s']:.2f},"
               f"{r['arith_intensity']:.1f}")
+
+    # -- precision sweep (PR-6): score_dtype axis at the default point -----
+    prows = run_precision()
+    print("name,score_dtype,N,block,ms,gflops_s,emb_bytes")
+    for r in prows:
+        print(f"mips_precision,{r['score_dtype']},{r['N']},{r['block']},"
+              f"{r['ms']:.2f},{r['gflops_s']:.2f},{r['emb_bytes']}")
+    by = {r["score_dtype"]: r for r in prows}
+    speedup = by["f32"]["ms"] / max(by["bf16"]["ms"], 1e-9)
+    shrink = by["f32"]["emb_bytes"] / by["bf16"]["emb_bytes"]
+    print(f"mips_precision,bf16_throughput_x,{speedup:.2f},,,,")
+    print(f"mips_precision,bf16_emb_byte_shrink_x,{shrink:.1f},,,,")
+    assert speedup >= 1.5 or shrink >= 2.0, \
+        f"bf16 must win >= 1.5x throughput or >= 2x embedding bytes vs " \
+        f"f32 (got {speedup:.2f}x / {shrink:.1f}x)"
     return rows
 
 

@@ -178,9 +178,12 @@ def run_rerank(n_queries: int = 2048, cmax: int = 256,
 
     def stream(stage):
         def go():
+            # honor the compacting rerank stage's packed pseudo-chunk store,
+            # exactly like StreamingEngine.run
+            st = getattr(stage, "store_override", None) or store
             carry = stage.init(q_dev)
-            for toks, mask, base, n_valid in store.chunks():
-                if not stage.wants_chunk(base // store.chunk):
+            for toks, mask, base, n_valid in st.chunks():
+                if not stage.wants_chunk(base // st.chunk):
                     continue
                 carry = stage.step(params, q_dev, carry, toks, mask, base,
                                    n_valid)
@@ -207,6 +210,112 @@ def run_rerank(n_queries: int = 2048, cmax: int = 256,
     rows = [{"engine": name, "total_s": min(times[name]),
              "peak_cand_bytes": cand_bytes[name]} for name in fns]
     return rows, outs
+
+
+def run_rerank_sparse(n_queries: int = 256, cands_per_q: int = 4,
+                      corpus_size: int = 8192, dim: int = 16,
+                      chunk: int = 64, seed: int = 0, repeats: int = 5):
+    """Sparse-rerank gather compaction: at very sparse candidate depths
+    (here ~4 candidates/query over a 8192-doc corpus, chunk=64) nearly every
+    chunk survives chunk-skipping with only a handful of candidate rows in
+    it.  The compacting stage packs those rows into dense pseudo-chunks, so
+    encoded rows collapse from ``surviving_chunks x chunk`` to roughly the
+    unique-candidate count — bit-for-bit identical output (integer-valued
+    embeddings, row-independent encoder).
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import engine as E
+
+    rng = np.random.default_rng(seed)
+    vocab = 64
+    table = rng.integers(-4, 5, size=(vocab, dim)).astype(np.float32)
+    doc_texts = [[int(i % vocab)] for i in range(corpus_size)]
+    q = rng.integers(-4, 5, size=(n_queries, dim)).astype(np.float32)
+    qids = [f"q{i}" for i in range(n_queries)]
+    dids = [f"d{i}" for i in range(corpus_size)]
+    # spread candidates so nearly every chunk holds at least one: the
+    # worst case for chunk-skipping, the best case for compaction
+    picks = rng.permuted(np.tile(np.arange(corpus_size), (n_queries, 1)),
+                         axis=1)[:, :cands_per_q]
+    per_query = {qid: [f"d{j}" for j in row]
+                 for qid, row in zip(qids, picks)}
+    params = {"table": jnp.asarray(table)}
+    q_dev = jnp.asarray(q)
+
+    def enc(params, tokens, mask):
+        return jnp.take(params["table"], tokens[:, 0], axis=0)
+
+    store = E.TokenStore.build(doc_texts, max_len=2, chunk=chunk)
+    kw = dict(k=10, query_ids=qids, doc_ids=dids, per_query=per_query,
+              store=store)
+    stages = {"rerank_plain": E.StreamRerankStage(enc, compact=False, **kw),
+              "rerank_compact": E.StreamRerankStage(enc, compact=True, **kw)}
+    assert stages["rerank_compact"].store_override is not None, \
+        "sparse candidates must trigger gather compaction"
+
+    def stream(stage):
+        def go():
+            st = getattr(stage, "store_override", None) or store
+            carry = stage.init(q_dev)
+            for toks, mask, base, n_valid in st.chunks():
+                if not stage.wants_chunk(base // st.chunk):
+                    continue
+                carry = stage.step(params, q_dev, carry, toks, mask, base,
+                                   n_valid)
+            jax.block_until_ready(carry)
+            return stage.finalize(carry)
+        return go
+
+    fns = {name: stream(stg) for name, stg in stages.items()}
+    outs = {name: fn() for name, fn in fns.items()}
+    times = {name: [] for name in fns}
+    for _ in range(repeats):
+        for name, fn in fns.items():
+            t0 = time.time()
+            fn()
+            times[name].append(time.time() - t0)
+
+    surviving = sum(stages["rerank_plain"].wants_chunk(ci)
+                    for ci in range(store.n_chunks))
+    packed = stages["rerank_compact"].store_override.n_chunks
+    rows = [{"engine": "rerank_plain", "total_s": min(times["rerank_plain"]),
+             "chunks_encoded": surviving},
+            {"engine": "rerank_compact",
+             "total_s": min(times["rerank_compact"]),
+             "chunks_encoded": packed}]
+    return rows, outs
+
+
+def run_precision(corpus_size: int = 4000, n_queries: int = 48,
+                  chunk: int = 256, k: int = 100, seed: int = 0,
+                  repeats: int = 5):
+    """score_dtype sweep through the full streaming validation pipeline:
+    wall time, the analytic per-chunk embedding bytes the fused step moves,
+    and metric proximity to the f32 run."""
+    from repro.core.precision import itemsize
+
+    ds = corpus_lib.synthetic_retrieval_dataset(
+        seed, n_passages=corpus_size, n_queries=n_queries)
+    spec = toy_spec(ds.vocab)
+    params, _ = train_toy_dr(ds, spec, steps=50, seed=seed)
+    rows, results = [], {}
+    for dt in ("f32", "bf16", "int8"):
+        vcfg = ValidationConfig(metrics=("MRR@10",), k=k, batch_size=chunk,
+                                chunk_size=chunk, engine="streaming",
+                                score_dtype=dt)
+        pipe = ValidationPipeline(spec, ds.corpus, ds.queries, ds.qrels,
+                                  vcfg)
+        pipe.validate_params(params)                    # warm-up
+        times = [pipe.validate_params(params, step=r).timings["total_s"]
+                 for r in range(repeats)]
+        results[dt] = pipe.validate_params(params, step=repeats)
+        rows.append({"score_dtype": dt, "total_s": min(times),
+                     "chunk_emb_bytes": chunk * spec.dim * itemsize(dt),
+                     "mrr": results[dt].metrics["MRR@10"]})
+    return rows, results
 
 
 def main():
@@ -283,6 +392,40 @@ def main():
     assert rr_time <= rr_slack, \
         f"blocked rerank gather must stay within 10% of dense wall time " \
         f"(ratio={rr_time:.3f} > {rr_slack:.3f})"
+
+    # -- sparse-rerank gather compaction (PR-6) ----------------------------
+    srows, souts = run_rerank_sparse()
+    print("name,engine,total_s,chunks_encoded,,")
+    for r in srows:
+        print(f"rerank_sparse,{r['engine']},{r['total_s']:.3f},"
+              f"{r['chunks_encoded']},,")
+    sby = {r["engine"]: r for r in srows}
+    chunk_shrink = (sby["rerank_plain"]["chunks_encoded"]
+                    / max(sby["rerank_compact"]["chunks_encoded"], 1))
+    print(f"rerank_sparse,chunks_encoded_shrink_x,{chunk_shrink:.1f},,,")
+    assert souts["rerank_compact"] == souts["rerank_plain"], \
+        "compacted sparse rerank diverged from the plain stream"
+    assert chunk_shrink >= 2, \
+        f"gather compaction must at least halve encoded chunks at sparse " \
+        f"depths (got {chunk_shrink:.1f}x)"
+
+    # -- score_dtype sweep through the streaming pipeline (PR-6) -----------
+    prows, presults = run_precision()
+    print("name,score_dtype,total_s,chunk_emb_bytes,mrr,")
+    for r in prows:
+        print(f"stream_precision,{r['score_dtype']},{r['total_s']:.3f},"
+              f"{r['chunk_emb_bytes']},{r['mrr']:.4f},")
+    pby = {r["score_dtype"]: r for r in prows}
+    emb_shrink = (pby["f32"]["chunk_emb_bytes"]
+                  / pby["bf16"]["chunk_emb_bytes"])
+    print(f"stream_precision,bf16_chunk_emb_shrink_x,{emb_shrink:.1f},,,")
+    assert emb_shrink >= 2.0, \
+        "bf16 must halve the per-chunk embedding bytes the step moves"
+    for dt in ("bf16", "int8"):
+        delta = abs(pby[dt]["mrr"] - pby["f32"]["mrr"])
+        assert delta <= 0.05, \
+            f"{dt} validation must stay near the f32 metric " \
+            f"(|delta MRR@10|={delta:.4f})"
     return rows
 
 

@@ -70,7 +70,12 @@ def main():
     # engine="streaming" fuses corpus encoding with the running top-k on
     # device, chunk by chunk: the (N, D) embedding matrix is never
     # materialized, so the corpus can outgrow host RAM.  chunk_size sets the
-    # streaming granularity (defaults to batch_size).
+    # streaming granularity (defaults to batch_size).  score_dtype
+    # ("f32" default | "bf16" | "int8", CLI: --score_dtype) quantizes only
+    # the SCORING matmul — bf16 halves / int8 quarters the embedding bytes
+    # the top-k stage moves; precision is a fidelity knob exactly like
+    # subset depth (recorded per ledger row, rank-correlation measured in
+    # benchmarks/bench_fidelity.py), never a silent default.
     corpus = corpus_lib.read_jsonl(corpus_path)       # round-trip the files
     queries = corpus_lib.read_jsonl(query_path)
     qrels = read_trec_qrels(qrel_path)

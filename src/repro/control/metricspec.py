@@ -80,8 +80,7 @@ class MetricSpec:
         return sum(w * self._lookup(k, metrics) for w, k in self.terms)
 
 
-def flatten_rows(rows, expected_tasks=None) -> List[Tuple[int,
-                                                          Dict[str, float]]]:
+def flatten_rows(rows, expected_tasks=None, with_context=False):
     """Group per-(step, task) ledger rows back into per-step flat metric
     dicts — the observation stream the control plane consumed online.
 
@@ -97,15 +96,23 @@ def flatten_rows(rows, expected_tasks=None) -> List[Tuple[int,
     suite's task rows) was never observed by the online controller, so
     replaying it — even when the surviving rows happen to satisfy the
     metric spec — would diverge EMA/patience/ranking state from the
-    crash-free run.  The step re-validates and re-records in full."""
-    out: List[Tuple[int, Dict[str, float], set]] = []
+    crash-free run.  The step re-validates and re-records in full.
+
+    ``with_context=True`` returns ``(step, flat, context)`` triples, where
+    ``context`` is the provenance payload the online controller attached to
+    its events (``{"engine", "score_dtype"}``, joined across the group's
+    rows exactly like :class:`~repro.core.suite.SuiteResult` joins them) —
+    or ``None`` when no row in the group carries either key, so replaying a
+    pre-provenance ledger emits byte-identical events."""
+    out: List[Tuple[int, Dict[str, float], set, list]] = []
     for row in rows:
         step = int(row["step"])
         task = str(row.get("task", "default"))
         if not out or out[-1][0] != step:
-            out.append((step, {}, set()))
-        _, flat, tasks = out[-1]
+            out.append((step, {}, set(), []))
+        _, flat, tasks, raws = out[-1]
         tasks.add(task)
+        raws.append(row)
         for m, v in row.get("metrics", {}).items():
             if task == "default":
                 flat[m] = v
@@ -113,7 +120,21 @@ def flatten_rows(rows, expected_tasks=None) -> List[Tuple[int,
     if expected_tasks is not None:
         expected = set(expected_tasks)
         out = [g for g in out if expected <= g[2]]
-    return [(step, flat) for step, flat, _ in out]
+    if not with_context:
+        return [(step, flat) for step, flat, _, _ in out]
+
+    def join(values: set) -> str:
+        return values.pop() if len(values) == 1 else ",".join(sorted(values))
+
+    result = []
+    for step, flat, _, raws in out:
+        ctx = None
+        if any("engine" in r or "score_dtype" in r for r in raws):
+            ctx = {"engine": join({str(r.get("engine", "")) for r in raws}),
+                   "score_dtype": join({str(r.get("score_dtype", "f32"))
+                                        for r in raws})}
+        result.append((step, flat, ctx))
+    return result
 
 
 def metric_mode(spec: str) -> str:

@@ -104,8 +104,9 @@ class ControlPlane:
             return self._train_loss[self._train_steps[i - 1]]
 
     # -- decision path (pure; shared by online + offline replay) ------------
-    def observe(self, step: int, metrics: Dict[str, float]) -> None:
-        decision = self.selector.observe(step, metrics)
+    def observe(self, step: int, metrics: Dict[str, float],
+                context: Optional[dict] = None) -> None:
+        decision = self.selector.observe(step, metrics, context=context)
         if self.earlystop is not None:
             # early stopping judges the SAME (EMA-smoothed) series the
             # selector ranks by — with cfg.ema a raw noise spike must not
@@ -133,9 +134,10 @@ class ControlPlane:
         rehydrated — a stop verdict must come from evidence this session
         gathers (a continued run deliberately gets fresh patience)."""
         n = 0
-        for step, flat in flatten_rows(rows, expected_tasks):
+        for step, flat, ctx in flatten_rows(rows, expected_tasks,
+                                            with_context=True):
             try:
-                self.selector.observe(step, flat)
+                self.selector.observe(step, flat, context=ctx)
             except KeyError:
                 # without expected_tasks a partially-recorded step can
                 # still surface here, missing the metric the spec needs;
@@ -149,7 +151,12 @@ class ControlPlane:
     # -- validator hook (decisions + actuations) ----------------------------
     def on_result(self, result: Any, validator: Any = None) -> None:
         """AsyncValidator post-record hook (runs on the validator thread)."""
-        self.observe(result.step, result.metrics)
+        # provenance attached to the decision event exactly as the ledger
+        # rows record it, so offline replay re-derives the same payload
+        context = {"engine": str(getattr(result, "engine", "")),
+                   "score_dtype": str(getattr(result, "score_dtype",
+                                              "f32"))}
+        self.observe(result.step, result.metrics, context=context)
         if self.cfg.keep_top_k > 0 and self.ckpt_root and validator is not None:
             self.selector.gc(self.ckpt_root,
                              protect=validator.protect_set(),
@@ -202,9 +209,10 @@ def replay_ledger(rows, cfg: ControlConfig, *, train_history=None,
     plane = ControlPlane(None, cfg, stop_path=None, event_path=None)
     for step, loss in (train_history or []):
         plane.note_train(step, {"loss": loss})
-    for step, flat in flatten_rows(rows, expected_tasks):
+    for step, flat, ctx in flatten_rows(rows, expected_tasks,
+                                        with_context=True):
         try:
-            plane.observe(step, flat)
+            plane.observe(step, flat, context=ctx)
         except KeyError:
             continue          # partial step (crash between task rows): the
             #                   online controller never observed it either

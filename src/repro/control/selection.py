@@ -77,8 +77,14 @@ class CheckpointSelector:
         return self._value.get(step)
 
     # -- ingestion ----------------------------------------------------------
-    def observe(self, step: int, metrics: Dict[str, float]) -> dict:
+    def observe(self, step: int, metrics: Dict[str, float],
+                context: Optional[dict] = None) -> dict:
         """Fold one validation row in (observation order = smoothing order).
+
+        ``context`` is optional provenance (``{"engine", "score_dtype"}``)
+        merged into the decision record, so every ``select`` event names the
+        data path and scoring precision that produced its value — mixed-
+        precision ledgers stay auditable from the event log alone.
 
         Returns the decision record; also emitted as a ``select`` event."""
         x = self.spec.value(metrics)
@@ -96,6 +102,8 @@ class CheckpointSelector:
                     "new_best": self.best_step == step
                                 and prev_best != step,
                     "top_steps": self.top_steps()}
+        if context:
+            decision.update(context)
         self.events.emit("select", step, **decision)
         return decision
 
@@ -109,9 +117,10 @@ class CheckpointSelector:
         controller never observed it (same discipline as
         ``ControlPlane.rehydrate`` / ``replay_ledger``)."""
         from repro.control.metricspec import flatten_rows
-        for step, flat in flatten_rows(rows, expected_tasks):
+        for step, flat, ctx in flatten_rows(rows, expected_tasks,
+                                            with_context=True):
             try:
-                self.observe(step, flat)
+                self.observe(step, flat, context=ctx)
             except KeyError:
                 continue
 

@@ -139,6 +139,18 @@ def main(argv=None) -> int:
                          "auto-sized from a 256 MiB budget)")
     ap.add_argument("--fp16", action="store_true",
                     help="bf16 compute (TPU-native half precision)")
+    ap.add_argument("--score_dtype", default="f32",
+                    choices=["f32", "bf16", "int8"],
+                    help="scoring precision of the MIPS/rerank data path: "
+                         "'f32' (default, bit-for-bit legacy), 'bf16' "
+                         "(inputs cast to bf16, f32 MXU accumulation — "
+                         "half the embedding bytes, ~2x MXU throughput) or "
+                         "'int8' (symmetric per-row quantization, exact "
+                         "int32 accumulation — quarter the bytes).  "
+                         "Precision is a FIDELITY knob like --depth subset "
+                         "sampling: it is recorded in every ledger row and "
+                         "control event, and benchmarks/bench_fidelity.py "
+                         "sweeps its rank correlation vs the f32 full run")
     ap.add_argument("--mode", default="retrieval",
                     help="'retrieval' (default), 'rerank', 'average_rank', "
                          "or any @register_mode name")
@@ -305,6 +317,7 @@ def main(argv=None) -> int:
                             mmap_dir=mmap_dir,
                             token_fingerprint=args.token_fingerprint,
                             rerank_block=args.rerank_block,
+                            score_dtype=args.score_dtype,
                             write_run=args.write_run,
                             output_dir=args.output_dir,
                             run_tag=args.run_name)

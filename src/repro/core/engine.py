@@ -59,6 +59,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.encoder import cached_compiled, encode_texts, jitted_encoder
+from repro.core.precision import chunk_scores, validate_score_dtype
 from repro.core.registry import (ENGINES, IMPLS, MODES, STAGES,
                                  register_engine, register_impl,
                                  register_mode, register_stage)
@@ -543,17 +544,26 @@ class StreamTopKStage(Stage):
     name = "topk_xla"
 
     def __init__(self, encode_fn: Callable, *, k: int, query_ids: List[str],
-                 doc_ids: List[str], window: int = 8):
+                 doc_ids: List[str], window: int = 8,
+                 score_dtype: str = "f32"):
         self.query_ids = query_ids
         self.doc_ids = doc_ids
         self.k = max(1, min(k, len(doc_ids))) if doc_ids else 0
         self.window = max(1, window)
+        self.score_dtype = validate_score_dtype(score_dtype)
         k_carry = self.k
 
         def fold(carry, q_emb, params, toks, mask, base, n_valid):
             run_s, run_i = carry
             emb = encode_fn(params, toks, mask)               # (chunk, D)
-            s = (q_emb @ emb.T).astype(jnp.float32)           # (Q, chunk)
+            # static precision branch: "f32" keeps the literal legacy
+            # expression (bit-for-bit); narrow dtypes cast the chunk's
+            # embeddings once, right here, and dequantize to f32 scores
+            # before the mask + merge below ever see them.
+            if score_dtype == "f32":
+                s = (q_emb @ emb.T).astype(jnp.float32)       # (Q, chunk)
+            else:
+                s = chunk_scores(q_emb, emb, score_dtype)     # (Q, chunk)
             chunk = toks.shape[0]
             col = jnp.arange(chunk, dtype=jnp.int32)
             s = jnp.where((col < n_valid)[None, :], s, -jnp.inf)
@@ -618,11 +628,11 @@ class PallasStreamTopKStage(StreamTopKStage):
     name = "topk_pallas"
 
     def __init__(self, encode_fn: Callable, *, k: int, query_ids: List[str],
-                 doc_ids: List[str]):
+                 doc_ids: List[str], score_dtype: str = "f32"):
         # window=1: every chunk must go through the Pallas kernel, not the
         # XLA scan fallback.
         super().__init__(encode_fn, k=k, query_ids=query_ids, doc_ids=doc_ids,
-                         window=1)
+                         window=1, score_dtype=score_dtype)
         self._encode = jitted_encoder(encode_fn)
 
     def step(self, params, q_emb, carry, toks, mask, base, n_valid):
@@ -630,7 +640,8 @@ class PallasStreamTopKStage(StreamTopKStage):
         emb = self._encode(params, toks, mask)                # device-resident
         run_s, run_i = carry
         return mips_ops.topk_mips_chunk(q_emb, emb, run_s, run_i, base=base,
-                                        n_valid=n_valid)
+                                        n_valid=n_valid,
+                                        score_dtype=self.score_dtype)
 
 
 class ShardedStreamTopKStage(StreamTopKStage):
@@ -645,11 +656,11 @@ class ShardedStreamTopKStage(StreamTopKStage):
 
     def __init__(self, encode_fn: Callable, mesh, *, k: int,
                  query_ids: List[str], doc_ids: List[str],
-                 axis_names=None):
+                 axis_names=None, score_dtype: str = "f32"):
         # window=1: the scan-window fast path is single-device XLA; every
         # sharded chunk must go through the shard_map step below.
         super().__init__(encode_fn, k=k, query_ids=query_ids,
-                         doc_ids=doc_ids, window=1)
+                         doc_ids=doc_ids, window=1, score_dtype=score_dtype)
         axis_names = tuple(axis_names or mesh.axis_names)
         k_carry = self.k
         ax = axis_names[0] if len(axis_names) == 1 else axis_names
@@ -658,7 +669,12 @@ class ShardedStreamTopKStage(StreamTopKStage):
             emb = encode_fn(params, toks, mask)               # (rows, D) local
             rows = toks.shape[0]
             shard = jax.lax.axis_index(ax)
-            s = (q_emb @ emb.T).astype(jnp.float32)           # (Q, rows)
+            # per-ROW quantization is sharding-independent, so each shard's
+            # local quantized scores equal the single-device stage's slice
+            if score_dtype == "f32":
+                s = (q_emb @ emb.T).astype(jnp.float32)       # (Q, rows)
+            else:
+                s = chunk_scores(q_emb, emb, score_dtype)     # (Q, rows)
             col = shard * rows + jnp.arange(rows, dtype=jnp.int32)
             s = jnp.where((col < n_valid)[None, :], s, -jnp.inf)
             kk = min(k_carry, rows)
@@ -708,19 +724,37 @@ class StreamRerankStage(Stage):
 
     def __init__(self, encode_fn: Callable, *, k: int, query_ids: List[str],
                  doc_ids: List[str], per_query: Dict[str, List[str]],
-                 store: Optional[TokenStore] = None):
+                 store: Optional[TokenStore] = None,
+                 score_dtype: str = "f32", compact: bool = False):
         self.query_ids = query_ids
         self.k = k
+        self.score_dtype = validate_score_dtype(score_dtype)
         cand_idx, self.cands = pad_candidates(query_ids, doc_ids, per_query)
-        self.cand_idx = jnp.asarray(cand_idx)
         self.cmap = store.candidate_map(cand_idx) \
             if store is not None and store.n_chunks else None
+        # gather compaction: at very sparse candidate depths most rows of a
+        # surviving chunk are non-candidates that get encoded and masked to
+        # -inf anyway.  Packing the candidate rows into dense pseudo-chunks
+        # (and remapping the slot map onto them) makes every encoded row a
+        # candidate — bit-for-bit identical scores for any row-independent
+        # encoder, since the same token rows land in the same slots.  The
+        # engine streams self.store_override instead of the original store.
+        self.store_override: Optional[TokenStore] = None
+        if compact and self.cmap is not None:
+            packed = self._pack_candidates(store, cand_idx)
+            if packed is not None:
+                cand_idx, self.store_override = packed
+                self.cmap = self.store_override.candidate_map(cand_idx)
+        self.cand_idx = jnp.asarray(cand_idx)
         self._row_masks: Dict[int, jnp.ndarray] = {}
 
         def fused(params, q_emb, cand_s, cand_idx, toks, mask, row_mask,
                   base, n_valid):
             emb = encode_fn(params, toks, mask)               # (chunk, D)
-            s = (q_emb @ emb.T).astype(jnp.float32)           # (Q, chunk)
+            if score_dtype == "f32":
+                s = (q_emb @ emb.T).astype(jnp.float32)       # (Q, chunk)
+            else:
+                s = chunk_scores(q_emb, emb, score_dtype)     # (Q, chunk)
             chunk = toks.shape[0]
             # score only candidate-member rows (membership precomputed per
             # chunk on the TokenStore side); hit slots always reference
@@ -732,6 +766,44 @@ class StreamRerankStage(Stage):
             return jnp.where(hit, g, cand_s)
 
         self._fused = jax.jit(fused, donate_argnums=_donate(2,))
+
+    @staticmethod
+    def _pack_candidates(store: TokenStore, cand_idx: np.ndarray):
+        """Pack candidate token rows into dense pseudo-chunks.
+
+        Returns ``(remapped_cand_idx, compact_store)``, or ``None`` when the
+        candidate set is not sparse enough to pay for itself (the compacted
+        store must need at most HALF the chunks the chunk-skipping schedule
+        would already encode).  Host cost is one gather of
+        O(candidate_rows x L) tokens, amortized across every checkpoint the
+        stage validates — the same once-per-lifetime deal as the
+        CandidateMap itself.
+        """
+        rows = np.unique(cand_idx[cand_idx >= 0])
+        rows = rows[rows < store.n_texts]
+        if not rows.size or not store.n_chunks:
+            return None
+        row_mask = np.zeros((store.n_chunks, store.chunk), bool)
+        row_mask[rows // store.chunk, rows % store.chunk] = True
+        surviving = int((row_mask.any(axis=1)).sum())
+        n_compact = -(-int(rows.size) // store.chunk)
+        if n_compact * 2 > surviving:
+            return None
+        L = store.tokens.shape[2]
+        flat_t = store.tokens.reshape(store.n_chunks * store.chunk, L)
+        flat_m = store.mask.reshape(store.n_chunks * store.chunk, L)
+        toks = np.zeros((n_compact, store.chunk, L), np.int32)
+        mask = np.zeros((n_compact, store.chunk, L), bool)
+        toks.reshape(-1, L)[:rows.size] = flat_t[rows]   # memmap-safe copy
+        mask.reshape(-1, L)[:rows.size] = flat_m[rows]
+        compact = TokenStore(tokens=toks, mask=mask, chunk=store.chunk,
+                             n_texts=int(rows.size))
+        remapped = np.where(
+            cand_idx >= 0,
+            np.searchsorted(rows, np.clip(cand_idx, 0, None))
+            .astype(np.int32),
+            np.int32(-1))
+        return np.asarray(remapped, np.int32), compact
 
     def wants_chunk(self, ci: int) -> bool:
         """False for chunks holding no candidate rows — the engine neither
@@ -796,9 +868,11 @@ class ShardedStreamRerankStage(StreamRerankStage):
     def __init__(self, encode_fn: Callable, mesh, *, k: int,
                  query_ids: List[str], doc_ids: List[str],
                  per_query: Dict[str, List[str]],
-                 store: Optional[TokenStore] = None, axis_names=None):
+                 store: Optional[TokenStore] = None, axis_names=None,
+                 score_dtype: str = "f32", compact: bool = False):
         super().__init__(encode_fn, k=k, query_ids=query_ids,
-                         doc_ids=doc_ids, per_query=per_query, store=store)
+                         doc_ids=doc_ids, per_query=per_query, store=store,
+                         score_dtype=score_dtype, compact=compact)
         axis_names = tuple(axis_names or mesh.axis_names)
         ax = axis_names[0] if len(axis_names) == 1 else axis_names
 
@@ -807,7 +881,12 @@ class ShardedStreamRerankStage(StreamRerankStage):
             emb = encode_fn(params, toks, mask)           # (rows, D) local
             rows = toks.shape[0]
             shard = jax.lax.axis_index(ax)
-            s = (q_emb @ emb.T).astype(jnp.float32)       # (Q, rows) local
+            # per-row quantization: shard-local quantized scores equal the
+            # single-device stage's slice (see ShardedStreamTopKStage)
+            if score_dtype == "f32":
+                s = (q_emb @ emb.T).astype(jnp.float32)   # (Q, rows) local
+            else:
+                s = chunk_scores(q_emb, emb, score_dtype)  # (Q, rows) local
             col = shard * rows + jnp.arange(rows, dtype=jnp.int32)
             s = jnp.where((row_mask & (col < n_valid))[None, :], s, -jnp.inf)
             pos = cand_idx - base - shard * rows          # shard-local slot
@@ -877,46 +956,57 @@ def _route_mode_rerank(*, impl: str, mesh=None, per_query=None) -> str:
 
 @register_stage("topk_xla")
 def _stage_topk_xla(encode_fn, *, k, query_ids, doc_ids, scan_window=8,
-                    mesh=None, per_query=None, store=None) -> Stage:
+                    mesh=None, per_query=None, store=None,
+                    score_dtype="f32", rerank_compact=False) -> Stage:
     return StreamTopKStage(encode_fn, k=k, query_ids=query_ids,
-                           doc_ids=doc_ids, window=scan_window)
+                           doc_ids=doc_ids, window=scan_window,
+                           score_dtype=score_dtype)
 
 
 @register_stage("topk_pallas")
 def _stage_topk_pallas(encode_fn, *, k, query_ids, doc_ids, scan_window=8,
-                       mesh=None, per_query=None, store=None) -> Stage:
+                       mesh=None, per_query=None, store=None,
+                       score_dtype="f32", rerank_compact=False) -> Stage:
     return PallasStreamTopKStage(encode_fn, k=k, query_ids=query_ids,
-                                 doc_ids=doc_ids)
+                                 doc_ids=doc_ids, score_dtype=score_dtype)
 
 
 @register_stage("topk_sharded")
 def _stage_topk_sharded(encode_fn, *, k, query_ids, doc_ids, scan_window=8,
-                        mesh=None, per_query=None, store=None) -> Stage:
+                        mesh=None, per_query=None, store=None,
+                        score_dtype="f32", rerank_compact=False) -> Stage:
     return ShardedStreamTopKStage(encode_fn, mesh, k=k, query_ids=query_ids,
-                                  doc_ids=doc_ids)
+                                  doc_ids=doc_ids, score_dtype=score_dtype)
 
 
 @register_stage("rerank")
 def _stage_rerank(encode_fn, *, k, query_ids, doc_ids, scan_window=8,
-                  mesh=None, per_query=None, store=None) -> Stage:
+                  mesh=None, per_query=None, store=None,
+                  score_dtype="f32", rerank_compact=True) -> Stage:
     return StreamRerankStage(encode_fn, k=max(k, 1000), query_ids=query_ids,
                              doc_ids=doc_ids, per_query=per_query,
-                             store=store)
+                             store=store, score_dtype=score_dtype,
+                             compact=rerank_compact)
 
 
 @register_stage("rerank_sharded")
 def _stage_rerank_sharded(encode_fn, *, k, query_ids, doc_ids, scan_window=8,
-                          mesh=None, per_query=None, store=None) -> Stage:
+                          mesh=None, per_query=None, store=None,
+                          score_dtype="f32", rerank_compact=True) -> Stage:
     return ShardedStreamRerankStage(encode_fn, mesh, k=max(k, 1000),
                                     query_ids=query_ids, doc_ids=doc_ids,
-                                    per_query=per_query, store=store)
+                                    per_query=per_query, store=store,
+                                    score_dtype=score_dtype,
+                                    compact=rerank_compact)
 
 
 def make_stage(encode_fn: Callable, *, mode: str, impl: str, k: int,
                query_ids: List[str], doc_ids: List[str],
                per_query: Optional[Dict[str, List[str]]] = None,
                mesh=None, scan_window: int = 8,
-               store: Optional[TokenStore] = None) -> Stage:
+               store: Optional[TokenStore] = None,
+               score_dtype: str = "f32",
+               rerank_compact: bool = True) -> Stage:
     """Route (mode, impl, mesh) to a Stage — the single dispatch point every
     validation path goes through, now resolved through the component
     registries: the ``mode`` route picks a stage name (consulting the
@@ -924,12 +1014,18 @@ def make_stage(encode_fn: Callable, *, mode: str, impl: str, k: int,
     registered stage factory.  ``(mode="rerank", mesh=...)`` just works:
     rerank shards over the validator mesh exactly like retrieval does.
     ``store`` (the corpus TokenStore) lets the rerank stages precompute
-    per-chunk candidate membership for chunk skipping.  Unknown mode/impl/
-    stage names raise listing the registered alternatives."""
+    per-chunk candidate membership for chunk skipping (and, with
+    ``rerank_compact``, pack sparse candidate rows into dense
+    pseudo-chunks).  ``score_dtype`` picks the scoring precision
+    (f32/bf16/int8) every stage family threads through
+    :mod:`repro.core.precision`.  Unknown mode/impl/stage names raise
+    listing the registered alternatives."""
     name = MODES.get(mode)(impl=impl, mesh=mesh, per_query=per_query)
     return STAGES.get(name)(encode_fn, k=k, query_ids=query_ids,
                             doc_ids=doc_ids, per_query=per_query, mesh=mesh,
-                            scan_window=scan_window, store=store)
+                            scan_window=scan_window, store=store,
+                            score_dtype=score_dtype,
+                            rerank_compact=rerank_compact)
 
 
 # ---------------------------------------------------------------------------
@@ -973,6 +1069,12 @@ class StreamingEngine:
         self.query_mesh = query_mesh
         self.query_axis_names = query_axis_names
 
+    @property
+    def score_dtype(self) -> str:
+        """Scoring precision of the wired stage — surfaced so the suite can
+        ledger it alongside the engine name."""
+        return getattr(self.stage, "score_dtype", "f32")
+
     def run(self, params) -> Tuple[Run, Scores, Dict[str, float]]:
         t0 = time.time()
         q_emb = encode_store(self.spec.encode_query, params, self.query_store,
@@ -982,7 +1084,9 @@ class StreamingEngine:
         t_query = time.time() - t0
 
         t0 = time.time()
-        store = self.doc_store
+        # a compacting rerank stage re-packed the candidate rows into its
+        # own dense pseudo-chunk store; stream that instead of the corpus
+        store = getattr(self.stage, "store_override", None) or self.doc_store
         carry = self.stage.init(q_emb)
         window = getattr(self.stage, "window", 1)
         use_window = window > 1 and hasattr(self.stage, "step_window")
@@ -1040,7 +1144,8 @@ class MaterializedEngine:
                  *, mode: str, k: int, impl: str, batch_size: int,
                  query_ids: List[str], doc_ids: List[str],
                  per_query: Optional[Dict[str, List[str]]] = None, mesh=None,
-                 rerank_block: Optional[int] = None):
+                 rerank_block: Optional[int] = None,
+                 score_dtype: str = "f32"):
         self.spec = spec
         self.doc_texts = doc_texts
         self.query_texts = query_texts
@@ -1055,12 +1160,20 @@ class MaterializedEngine:
         # queries per rerank candidate-gather block (None = auto from the
         # rerank_run memory budget); see rerank_run's docstring.
         self.rerank_block = rerank_block
+        self.score_dtype = validate_score_dtype(score_dtype)
 
     def run(self, params) -> Tuple[Run, Scores, Dict[str, float]]:
         t0 = time.time()
         c_emb, _ = encode_texts(self.spec.encode_passage, params,
                                 self.doc_texts, max_len=self.spec.p_max_len,
                                 batch_size=self.batch_size)
+        if self.score_dtype == "bf16":
+            # the resident (N, D) matrix — THE memory cost this engine pays
+            # that streaming doesn't — shrinks 2x; scoring casts back per
+            # block with f32 accumulation.  int8 keeps the f32 matrix and
+            # quantizes at score time (value-level parity with streaming
+            # beats resident shrink for the A/B baseline engine).
+            c_emb = np.asarray(jnp.asarray(c_emb, jnp.bfloat16))
         t_corpus = time.time() - t0
         t0 = time.time()
         q_emb, _ = encode_texts(self.spec.encode_query, params,
@@ -1073,11 +1186,13 @@ class MaterializedEngine:
             run, scores = rerank_run(self.query_ids, q_emb, self.doc_ids,
                                      c_emb, self.per_query,
                                      k=max(self.k, 1000),
-                                     q_block=self.rerank_block)
+                                     q_block=self.rerank_block,
+                                     score_dtype=self.score_dtype)
         else:
             run, scores = retrieve_run(self.query_ids, q_emb, self.doc_ids,
                                        c_emb, k=self.k, impl=self.impl,
-                                       mesh=self.mesh)
+                                       mesh=self.mesh,
+                                       score_dtype=self.score_dtype)
         t_retrieve = time.time() - t0
         timings = {"encode_corpus_s": t_corpus, "encode_query_s": t_query,
                    "retrieve_s": t_retrieve,
@@ -1159,7 +1274,9 @@ def make_streaming_engine(spec, store: ValidationStore, vcfg):
                        k=vcfg.k, query_ids=store.query_ids,
                        doc_ids=store.doc_ids, per_query=store.per_query,
                        mesh=mesh, scan_window=vcfg.scan_window,
-                       store=doc_store)
+                       store=doc_store,
+                       score_dtype=getattr(vcfg, "score_dtype", "f32"),
+                       rerank_compact=getattr(vcfg, "rerank_compact", True))
     return StreamingEngine(spec, doc_store, query_store, stage,
                            staging=vcfg.staging,
                            staging_depth=vcfg.staging_depth, query_mesh=mesh)
@@ -1181,7 +1298,9 @@ def make_materialized_engine(spec, store: ValidationStore, vcfg):
                               query_ids=store.query_ids,
                               doc_ids=store.doc_ids,
                               per_query=store.per_query, mesh=vcfg.mesh,
-                              rerank_block=vcfg.rerank_block)
+                              rerank_block=vcfg.rerank_block,
+                              score_dtype=getattr(vcfg, "score_dtype",
+                                                  "f32"))
 
 
 def make_engine(spec, store: ValidationStore, vcfg):

@@ -1,0 +1,93 @@
+"""Scoring precision as a first-class, measured fidelity axis.
+
+The paper cuts validation cost by shrinking the *data* (corpus subset
+sampling); ``score_dtype`` applies the same idea to the *compute*: score the
+corpus against the queries in bf16 or int8 instead of f32, halving or
+quartering the embedding bytes the MIPS stage moves, and treat the fidelity
+loss exactly like subset fidelity — recorded in every ledger row, swept in
+``benchmarks/bench_fidelity.py`` as rank correlation vs the f32 full run,
+never a silent default.
+
+One helper, :func:`chunk_scores`, computes the quantized ``(Q, rows)`` score
+block for every engine path (streaming XLA, sharded shard_map locals, the
+rerank stages, and the materialized scan), so all of them see *identical*
+quantized numerics:
+
+  * ``bf16`` — inputs cast to bf16, MXU accumulation forced to f32
+    (``preferred_element_type``); the running carries stay f32.
+  * ``int8`` — symmetric per-ROW quantization (scale = max|row| / 127,
+    ``repro.kernels.topk_mips.ops.quantize_int8``): a row's int8 image is
+    independent of chunking and sharding, the int8 x int8 -> int32
+    accumulation is exact, and the two per-row scale vectors are folded into
+    the scores as an outer product BEFORE any ``-inf`` masking or carry
+    merge — narrow dtypes never touch a merge or a mask.
+
+``"f32"`` is deliberately NOT routed through here: every stage keeps its
+original literal f32 expression behind a static branch, so the default path
+compiles to the bit-for-bit identical program it always was.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk_mips.ops import SCORE_DTYPES, quantize_int8
+
+__all__ = ["SCORE_DTYPES", "quantize_int8", "validate_score_dtype",
+           "chunk_scores", "itemsize", "quantize_rows_np"]
+
+# contraction dims for q (Q, D) x emb (rows, D) -> (Q, rows)
+_DIMS = (((1,), (1,)), ((), ()))
+
+
+def validate_score_dtype(score_dtype: str) -> str:
+    if score_dtype not in SCORE_DTYPES:
+        raise ValueError(f"unknown score_dtype {score_dtype!r} "
+                         f"(expected one of {SCORE_DTYPES})")
+    return score_dtype
+
+
+def itemsize(score_dtype: str) -> int:
+    """Bytes per embedding element at this scoring precision (the analytic
+    byte-shrink the benchmarks gate on)."""
+    return {"f32": 4, "bf16": 2, "int8": 1}[validate_score_dtype(score_dtype)]
+
+
+def chunk_scores(q_emb: jnp.ndarray, emb: jnp.ndarray,
+                 score_dtype: str) -> jnp.ndarray:
+    """Quantized scores for one chunk: (Q, D) x (rows, D) -> (Q, rows) f32.
+
+    Traceable (used inside the stages' jitted folds; ``score_dtype`` is a
+    Python-static attribute, so each stage compiles exactly one branch).
+    """
+    if score_dtype == "f32":
+        return (q_emb @ emb.T).astype(jnp.float32)
+    if score_dtype == "bf16":
+        return jax.lax.dot_general(
+            jnp.asarray(q_emb, jnp.bfloat16), jnp.asarray(emb, jnp.bfloat16),
+            _DIMS, preferred_element_type=jnp.float32)
+    if score_dtype == "int8":
+        qv, qs = quantize_int8(q_emb)
+        cv, cs = quantize_int8(emb)
+        raw = jax.lax.dot_general(qv, cv, _DIMS,
+                                  preferred_element_type=jnp.int32)
+        # dequantize with the per-row scale outer product; same formula as
+        # the Pallas int8 kernel — the exact int32 raw scores match, the two
+        # f32 scale multiplies may reassociate, so impls agree to ~1 ulp
+        # with identical top-k rank SETS (tests gate on exactly that)
+        return raw.astype(jnp.float32) * qs * cs.reshape(1, -1)
+    raise ValueError(f"unknown score_dtype {score_dtype!r} "
+                     f"(expected one of {SCORE_DTYPES})")
+
+
+def quantize_rows_np(x):
+    """Host-side twin of :func:`quantize_int8` for the materialized rerank
+    path (numpy in, numpy out; same formula, so the quantized images
+    match)."""
+    import numpy as np
+    x = np.asarray(x, np.float32)
+    amax = np.max(np.abs(x), axis=-1, keepdims=True)
+    scale = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+    vals = np.clip(np.round(x / scale), -127, 127).astype(np.int8)
+    return vals, scale

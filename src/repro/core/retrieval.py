@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core.precision import chunk_scores, validate_score_dtype
 from repro.distributed import compat
 
 
@@ -36,13 +37,19 @@ def _merge_topk(scores_a, idx_a, scores_b, idx_b, k: int):
     return top_s, jnp.take_along_axis(i, pos, axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block", "unroll"))
+@functools.partial(jax.jit, static_argnames=("k", "block", "unroll",
+                                             "score_dtype"))
 def topk_exact(q_emb: jnp.ndarray, c_emb: jnp.ndarray, *, k: int,
-               block: int = 4096, unroll: int = 1):
+               block: int = 4096, unroll: int = 1,
+               score_dtype: str = "f32"):
     """q_emb (Q, D) x c_emb (N, D) -> (scores (Q,k), indices (Q,k)).
 
     Scans corpus blocks, carrying a running top-k so the full (Q, N) score
-    matrix is never materialized (N can be 10^7)."""
+    matrix is never materialized (N can be 10^7).  ``score_dtype`` (static)
+    picks the scoring precision via :func:`repro.core.precision.
+    chunk_scores`; ``"f32"`` compiles the literal legacy expression.
+    Per-row quantization makes the block scores block-size independent, so
+    every precision agrees with the streaming stages at equal dtype."""
     Q, D = q_emb.shape
     N = c_emb.shape[0]
     k = min(k, N)
@@ -58,7 +65,10 @@ def topk_exact(q_emb: jnp.ndarray, c_emb: jnp.ndarray, *, k: int,
     def body(carry, inp):
         run_s, run_i = carry
         cb, bi = inp
-        s = (q_emb @ cb.T).astype(jnp.float32)               # (Q, nb)
+        if score_dtype == "f32":
+            s = (q_emb @ cb.T).astype(jnp.float32)           # (Q, nb)
+        else:
+            s = chunk_scores(q_emb, cb, score_dtype)         # (Q, nb)
         base = bi * nb
         valid = (base + jnp.arange(nb))[None, :] < N
         s = jnp.where(valid, s, -jnp.inf)
@@ -107,11 +117,14 @@ def _hierarchical_slot_max(x, axis_names):
 
 
 def topk_sharded(mesh, q_emb, c_emb, *, k: int, axis_names=("data", "model"),
-                 block: int = 4096):
+                 block: int = 4096, score_dtype: str = "f32"):
     """Distributed exact top-k: corpus rows sharded over ``axis_names``.
 
     Each shard computes a local top-k over its rows (global indices), then a
     hierarchical merge all-gathers the (k-candidate) lists and reduces.
+    ``score_dtype`` threads to the per-shard :func:`topk_exact`; per-ROW
+    quantization means each shard's quantized scores equal the single-device
+    slice, so sharded narrow-dtype runs match unsharded ones.
     """
     n_shards = int(np.prod([mesh.shape[a] for a in axis_names]))
     N = c_emb.shape[0]
@@ -122,7 +135,8 @@ def topk_sharded(mesh, q_emb, c_emb, *, k: int, axis_names=("data", "model"),
     def local(q, c_local):
         ax = axis_names[0] if len(axis_names) == 1 else axis_names
         shard_id = jax.lax.axis_index(ax)
-        s, i = topk_exact(q, c_local, k=kk, block=block)
+        s, i = topk_exact(q, c_local, k=kk, block=block,
+                          score_dtype=score_dtype)
         i = i + shard_id * rows
         return _hierarchical_topk_merge(s, i, axis_names, k)
 
@@ -138,18 +152,22 @@ def topk_sharded(mesh, q_emb, c_emb, *, k: int, axis_names=("data", "model"),
 
 
 def retrieve_run(query_ids, q_emb, doc_ids, c_emb, *, k: int,
-                 impl: str = "xla", mesh=None, block: int = 4096):
+                 impl: str = "xla", mesh=None, block: int = 4096,
+                 score_dtype: str = "f32"):
     """Build a {qid: [docid...]} run (+scores) from embeddings."""
+    validate_score_dtype(score_dtype)
     if impl == "pallas":
         from repro.kernels.topk_mips import ops as mips_ops
         scores, idx = mips_ops.topk_mips(jnp.asarray(q_emb),
-                                         jnp.asarray(c_emb), k=k)
+                                         jnp.asarray(c_emb), k=k,
+                                         score_dtype=score_dtype)
     elif mesh is not None:
         scores, idx = topk_sharded(mesh, jnp.asarray(q_emb),
-                                   jnp.asarray(c_emb), k=k, block=block)
+                                   jnp.asarray(c_emb), k=k, block=block,
+                                   score_dtype=score_dtype)
     else:
         scores, idx = topk_exact(jnp.asarray(q_emb), jnp.asarray(c_emb),
-                                 k=k, block=block)
+                                 k=k, block=block, score_dtype=score_dtype)
     scores = np.asarray(scores)
     idx = np.asarray(idx)
     run, run_scores = {}, {}
@@ -201,10 +219,30 @@ def rank_candidates(query_ids, s, cands, *, k: int):
 RERANK_BLOCK_BYTES = 256 << 20
 
 
+def _quantize_values_np(x: np.ndarray, score_dtype: str) -> np.ndarray:
+    """Value-level quantization for the host-side rerank path: return the
+    f32 array whose entries are exactly what the device would score at
+    ``score_dtype`` — bf16 is a round-trip through the storage dtype (a
+    bf16 x bf16 product is exact in f32, so f32 math over round-tripped
+    values IS the device bf16-input/f32-accumulate matmul up to summation
+    order), int8 is dequantized per-row symmetric quantization
+    (:func:`repro.core.precision.quantize_rows_np`)."""
+    if score_dtype == "bf16":
+        return np.asarray(np.asarray(x, jnp.bfloat16), np.float32)
+    if score_dtype == "int8":
+        from repro.core.precision import quantize_rows_np
+        vals, scale = quantize_rows_np(x)
+        return vals.astype(np.float32) * scale
+    raise ValueError(f"unexpected score_dtype {score_dtype!r}")
+
+
 def rerank_run(query_ids, q_emb, doc_ids, c_emb, per_query: dict, *, k: int,
-               q_block: int = None, block_bytes: int = RERANK_BLOCK_BYTES):
+               q_block: int = None, block_bytes: int = RERANK_BLOCK_BYTES,
+               score_dtype: str = "f32"):
     """RocketQA-style re-rank validation: score only each query's candidate
-    list (no global top-k).
+    list (no global top-k).  ``score_dtype`` quantizes the embeddings at
+    value level before the (unchanged, f32) blocked einsum — see
+    :func:`_quantize_values_np`.
 
     Memory model — query-blocked materialized gather: the candidate
     embeddings are gathered one *query block* at a time, ``(Q_block, Cmax,
@@ -221,8 +259,12 @@ def rerank_run(query_ids, q_emb, doc_ids, c_emb, per_query: dict, *, k: int,
     :func:`rank_candidates` (stable tie-break), the same routine the
     streaming rerank stages finalize through.
     """
+    validate_score_dtype(score_dtype)
     q = np.asarray(q_emb)
     c = np.asarray(c_emb)
+    if score_dtype != "f32":
+        q = _quantize_values_np(q, score_dtype)
+        c = _quantize_values_np(c, score_dtype)
     cand_idx, cands = pad_candidates(query_ids, doc_ids, per_query)
     valid = cand_idx >= 0
     if not valid.any():

@@ -74,6 +74,11 @@ class ValidationConfig:
     token_fingerprint: str = "fast"  # fast (O(1)) | full (content hash)
     rerank_block: Optional[int] = None  # queries per materialized rerank
                                      # candidate gather (None = auto budget)
+    score_dtype: str = "f32"         # scoring precision: f32 | bf16 | int8
+                                     # (precision-as-fidelity; recorded in
+                                     # every ledger row like `engine`)
+    rerank_compact: bool = True      # pack sparse rerank candidates into
+                                     # dense pseudo-chunks before encoding
     write_run: bool = False
     output_dir: Optional[str] = None
     run_tag: str = "asyncval"
@@ -92,6 +97,9 @@ class ValidationResult:
     # recorded in the validator ledger so cross-mode parity can be audited
     # after the fact.
     engine: str = ""
+    # scoring precision the engine ran at ("f32"/"bf16"/"int8") — ledgered
+    # like `engine`, so mixed-precision histories audit and replay offline.
+    score_dtype: str = "f32"
     task: str = "default"
 
 
@@ -184,6 +192,12 @@ class SuiteResult:
     @property
     def engine(self) -> str:
         names = {r.engine for r in self.tasks.values()}
+        return names.pop() if len(names) == 1 else ",".join(sorted(names))
+
+    @property
+    def score_dtype(self) -> str:
+        names = {getattr(r, "score_dtype", "f32")
+                 for r in self.tasks.values()}
         return names.pop() if len(names) == 1 else ",".join(sorted(names))
 
 
@@ -362,7 +376,8 @@ class ValidationSuite:
             out[name] = ValidationResult(
                 step=step, metrics=m, timings=timings,
                 subset_size=len(self._data[name].doc_ids),
-                engine=getattr(eng, "name", ""), task=name)
+                engine=getattr(eng, "name", ""),
+                score_dtype=getattr(eng, "score_dtype", "f32"), task=name)
         return SuiteResult(step=step, tasks=out)
 
 

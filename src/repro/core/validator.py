@@ -137,7 +137,10 @@ class ValidationLedger:
                  # which data path scored this step — lets a cross-mode
                  # parity audit (streaming vs materialized vs sharded)
                  # attribute every ledger row long after the run.
-                 "engine": getattr(r, "engine", "")}
+                 "engine": getattr(r, "engine", ""),
+                 # scoring precision of the row, recorded like `engine` so
+                 # replay_ledger and cross-precision audits work offline.
+                 "score_dtype": str(getattr(r, "score_dtype", "f32"))}
                 for r in results]
         with self._lock:
             for rec in recs:
@@ -259,7 +262,12 @@ class AsyncValidator:
                 # qualified for the rest (no default: duplicates)
                 logmet = getattr(result, "log_metrics", result.metrics)
                 self.logger.log(step, {**logmet, **result.timings,
-                                       "subset_size": result.subset_size})
+                                       "subset_size": result.subset_size,
+                                       "engine": getattr(result, "engine",
+                                                         ""),
+                                       "score_dtype": getattr(result,
+                                                              "score_dtype",
+                                                              "f32")})
             if self.controller is not None:
                 try:
                     self.controller.on_result(result, self)

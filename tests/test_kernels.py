@@ -14,7 +14,9 @@ from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
-from repro.kernels.topk_mips.ops import topk_mips
+from repro.kernels.topk_mips.kernel import (topk_mips_kernel,
+                                            topk_mips_kernel_int8)
+from repro.kernels.topk_mips.ops import quantize_int8, topk_mips
 from repro.kernels.topk_mips.ref import topk_mips_ref
 
 RNG = np.random.default_rng(42)
@@ -63,6 +65,113 @@ def test_topk_mips_property(Q, N, D, k):
     gathered = np.take_along_axis(full, i, axis=1)
     np.testing.assert_allclose(gathered, s, rtol=1e-5, atol=1e-5)
     assert (np.sort(full, axis=1)[:, -kk:] >= s[:, -1:] - 1e-5).all()
+
+
+def _quantized_oracle(q, c):
+    """Numpy twin of the int8 scoring path: per-row symmetric quantization,
+    EXACT integer accumulation (int32), then the per-row scale outer
+    product — what the kernel's raw int32 scores dequantize to."""
+    qv, qs = (np.asarray(a) for a in quantize_int8(jnp.asarray(q)))
+    cv, cs = (np.asarray(a) for a in quantize_int8(jnp.asarray(c)))
+    raw = qv.astype(np.int32) @ cv.astype(np.int32).T       # exact
+    return raw.astype(np.float32) * qs * cs.T
+
+
+@pytest.mark.parametrize("score_dtype", ["bf16", "int8"])
+@pytest.mark.parametrize("Q,N,D,k", [
+    (4, 300, 17, 10),          # ragged everything
+    (16, 1024, 128, 50),       # aligned
+    (7, 50, 64, 60),           # k > N (clipped)
+])
+def test_topk_mips_narrow_dtype_parity(Q, N, D, k, score_dtype):
+    """bf16/int8 paths: tolerance vs the f32 ref AND an exact rank-set gate
+    vs the same-precision full-score oracle (quantization may legitimately
+    reorder near-ties vs f32; it must NOT disagree with its own oracle)."""
+    q, c = _arr((Q, D), jnp.float32), _arr((N, D), jnp.float32)
+    s, i = topk_mips(q, c, k=k, score_dtype=score_dtype)
+    s, i = np.asarray(s), np.asarray(i)
+    kk = min(k, N)
+    # tolerance gate vs f32 ref: quantization error is bounded
+    rs, _ = topk_mips_ref(q, c, k=kk)
+    scale = float(np.abs(np.asarray(rs)).max()) or 1.0
+    assert np.abs(np.sort(s, 1) - np.sort(np.asarray(rs), 1)).max() \
+        <= 0.05 * scale
+    # exact rank-set gate vs the same-precision oracle
+    if score_dtype == "int8":
+        full = _quantized_oracle(q, c)
+    else:
+        full = np.asarray(jax.lax.dot_general(
+            jnp.asarray(q, jnp.bfloat16), jnp.asarray(c, jnp.bfloat16),
+            (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32))
+    oracle_i = np.argsort(-full, axis=1, kind="stable")[:, :kk]
+    for r in range(Q):
+        assert set(i[r]) == set(oracle_i[r])
+
+
+@pytest.mark.parametrize("score_dtype", ["bf16", "int8"])
+def test_topk_mips_n_valid_mask_narrow_dtypes(score_dtype):
+    """Garbage in the corpus padding rows must be invisible at every
+    precision — EXACTLY: per-row quantization means real rows' quantized
+    images don't depend on the padding rows at all."""
+    Q, N, D, k, n_valid = 8, 256, 32, 12, 200
+    q, c = _arr((Q, D), jnp.float32), _arr((N, D), jnp.float32)
+    s1, i1 = topk_mips(q, c[:n_valid], k=k, score_dtype=score_dtype)
+    c2 = c.at[n_valid:].set(1e6)                 # garbage past n_valid
+    s2, i2 = topk_mips(q, c2, k=k, n_valid=n_valid, score_dtype=score_dtype)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_topk_mips_kernel_rejects_k_gt_bn():
+    """The raw kernels assert k <= bn (a top-k wider than a corpus tile has
+    no single-tile merge); the ops wrapper instead GROWS bn and succeeds."""
+    q = jnp.zeros((8, 128), jnp.float32)
+    c = jnp.zeros((128, 128), jnp.float32)
+    with pytest.raises(AssertionError):
+        topk_mips_kernel(q, c, k=256, n_valid=128, bq=8, bn=128,
+                         interpret=True)
+    qv, qs = quantize_int8(q)
+    cv, cs = quantize_int8(c)
+    with pytest.raises(AssertionError):
+        topk_mips_kernel_int8(qv, cv, qs, cs.reshape(1, -1), k=256,
+                              n_valid=128, bq=8, bn=128, interpret=True)
+    s, i = topk_mips(q, c, k=96, bn=64)          # ops-level: bn grows
+    assert np.asarray(s).shape == (8, 96)
+
+
+def test_topk_mips_int8_per_tile_scales_at_boundaries():
+    """Per-corpus-row scales must ride with their tiles: a corpus with a
+    1000x magnitude cliff exactly at a bn-tile boundary still dequantizes
+    each tile with its own rows' scales (a mixed-up tile/scale pairing
+    would surface instantly as wrong winners)."""
+    Q, D, bn = 4, 64, 128
+    q = _arr((Q, D), jnp.float32)
+    tiles = [np.asarray(_arr((bn, D), jnp.float32)) * m
+             for m in (1.0, 1000.0, 0.001)]      # cliffs at rows 128, 256
+    c = jnp.asarray(np.concatenate(tiles, axis=0))
+    s, i = topk_mips(q, c, k=10, bn=bn, score_dtype="int8")
+    s, i = np.asarray(s), np.asarray(i)
+    full = _quantized_oracle(q, c)
+    oracle_i = np.argsort(-full, axis=1, kind="stable")[:, :10]
+    for r in range(Q):
+        assert set(i[r]) == set(oracle_i[r])
+    # dequantized kernel scores equal the exact-int oracle's to ~ulp (the
+    # two f32 scale multiplies may reassociate between compilers)
+    gathered = np.take_along_axis(full, i, axis=1)
+    np.testing.assert_allclose(s, gathered, rtol=1e-6)
+    # the big-magnitude tile's rows must dominate the top-k
+    assert ((i >= bn) & (i < 2 * bn)).all()
+
+
+def test_topk_mips_int8_matches_exact_integer_oracle():
+    """The kernel's int8 x int8 accumulation is exact: its scores match the
+    numpy int32 oracle to reassociation-ulp, never quantization-tolerance."""
+    Q, N, D, k = 8, 512, 96, 20
+    q, c = _arr((Q, D), jnp.float32), _arr((N, D), jnp.float32)
+    s, i = topk_mips(q, c, k=k, score_dtype="int8")
+    full = _quantized_oracle(np.asarray(q), np.asarray(c))
+    gathered = np.take_along_axis(full, np.asarray(i), axis=1)
+    np.testing.assert_allclose(np.asarray(s), gathered, rtol=1e-6)
 
 
 # ---------------------------------------------------------------------------
