@@ -1,0 +1,159 @@
+"""Validator fleet — N workers, one ledger work queue, one control plane.
+
+Asyncval's core move is validating on "another GPU" so training never
+pauses.  The fleet generalizes it: validation work is decomposed into
+claimable **(step, task) work units** published to the ledger itself, and
+any number of workers — possibly heterogeneous — claim, execute, and
+record them.  Everything coordinating the fleet lives in ONE append-only
+JSONL file (``repro.core.workqueue`` documents the claim-record schema),
+so there is no coordinator service, crashes never lose correctness (a
+dead worker's lease expires and a peer reclaims the unit), and the whole
+decision history replays offline bit-for-bit.
+
+This walkthrough runs the full topology in one process:
+
+  * a **trainer** thread committing toy-DR checkpoints on a cadence;
+  * a **fleet supervisor** publishing each committed step's units and
+    pumping completed steps into a :class:`ControlPlane` (selection +
+    early-stop + claim-aware checkpoint GC);
+  * two **heterogeneous workers**: a full-fidelity worker that alone has
+    the ``max_depth`` capability the "deep" task requires, and a smoke
+    worker that can only run the cheap "dev" task — capability tags are
+    matched against unit requirements at claim time.
+
+    PYTHONPATH=src python examples/fleet_validation.py
+"""
+
+import os
+import sys
+import tempfile
+import threading
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import toy_spec, train_toy_dr
+from repro.ckpt import checkpoint as ckpt
+from repro.control import ControlConfig, ControlPlane, replay_ledger
+from repro.core.suite import (ValidationConfig, ValidationSuite,
+                              ValidationTask)
+from repro.core.validator import ValidationLedger, ValidatorWorker
+from repro.core.workqueue import WorkQueue, replay
+from repro.data import corpus as corpus_lib
+from repro.launch.fleet import FleetSupervisor
+
+
+def main():
+    workdir = tempfile.mkdtemp(prefix="asyncval_fleet_")
+    ckdir = os.path.join(workdir, "ckpts")
+    ledger_path = os.path.join(workdir, "ledger.jsonl")
+    print(f"[fleet] workdir: {workdir}")
+
+    ds = corpus_lib.synthetic_retrieval_dataset(0, n_passages=600,
+                                                n_queries=60)
+    spec = toy_spec(ds.vocab)
+
+    # -- the suite: a cheap smoke task plus a deep task only SOME workers
+    # are equipped for (requires flow into each unit's claim requirements)
+    suite = ValidationSuite(spec, [
+        ValidationTask("dev", ds.corpus, ds.queries, ds.qrels,
+                       metrics=("MRR@10",), k=100),
+        ValidationTask("deep", ds.corpus, ds.queries, ds.qrels,
+                       metrics=("MRR@10", "Recall@100"), k=100,
+                       requires={"max_depth": 100}),
+    ], ValidationConfig(batch_size=128, chunk_size=128))
+    suite.build_engines()
+
+    # -- control plane: select on the deep metric, GC to top-3 ---------------
+    control = ControlPlane(
+        ckdir,
+        ControlConfig(metric="deep:MRR@10", mode="max", keep_top_k=3),
+        event_path=os.path.join(workdir, "control.jsonl"))
+
+    # -- supervisor: publishes units, pumps completions, claim-aware GC ------
+    sup = FleetSupervisor(ckdir, ledger_path, suite.task_names,
+                          control=control, plan_units=suite.plan_units,
+                          lease_ttl=32)
+
+    # -- two heterogeneous workers ------------------------------------------
+    def make_worker(worker_id, capabilities):
+        queue = WorkQueue(ledger_path, worker_id,
+                          capabilities=capabilities, lease_ttl=32)
+        return ValidatorWorker(
+            ckdir, suite,
+            ledger=ValidationLedger(ledger_path,
+                                    expected_tasks=suite.task_names),
+            queue=queue, worker_id=worker_id)
+
+    workers = [
+        make_worker("full-0", {"mesh_size": 1, "max_depth": 200}),
+        make_worker("smoke-0", {"mesh_size": 1}),   # cannot claim "deep"
+    ]
+
+    stop = threading.Event()
+
+    def worker_loop(worker):
+        while not stop.is_set():
+            if not worker.run_once():
+                time.sleep(0.02)
+
+    threads = [threading.Thread(target=worker_loop, args=(w,), daemon=True)
+               for w in workers]
+    for t in threads:
+        t.start()
+
+    # -- the trainer: commit checkpoints while the fleet drains them ---------
+    print("[fleet] training while 2 workers validate asynchronously...")
+    _, snapshots = train_toy_dr(ds, spec, steps=60, snapshot_every=15)
+    for step, params in snapshots:
+        ckpt.save(ckdir, step, {"params": params})
+        sup.run_once()                      # publish + pump + reap
+    n_steps = len(snapshots)
+
+    # -- drain: wait until every published step is fully validated -----------
+    deadline = time.monotonic() + 300
+    while time.monotonic() < deadline:
+        sup.run_once()
+        state = sup.queue.refresh()
+        if len(state.completed_units()) == n_steps * 2:
+            break
+        time.sleep(0.05)
+    stop.set()
+    for t in threads:
+        t.join(timeout=10)
+
+    # -- what happened -------------------------------------------------------
+    led = ValidationLedger(ledger_path, expected_tasks=suite.task_names)
+    print(f"[fleet] {len(led.validated_steps)} steps x "
+          f"{len(suite.task_names)} tasks validated")
+    by_worker = {}
+    for row in led.rows():
+        by_worker.setdefault(row["worker_id"], []).append(
+            (row["step"], row["task"]))
+    for wid, units in sorted(by_worker.items()):
+        print(f"  {wid}: {len(units)} units -> {sorted(units)}")
+    deep_workers = {row["worker_id"] for row in led.rows()
+                    if row["task"] == "deep"}
+    assert deep_workers == {"full-0"}, \
+        "only the max_depth-capable worker may run the deep task"
+    print(f"[fleet] best step by {control.cfg.metric}: "
+          f"{control.selector.best_step} "
+          f"(value {control.selector.best_value:.4f})")
+
+    # -- the ledger IS the coordination record: replay it offline ------------
+    state = replay(ledger_path, lease_ttl=32)
+    assert state.completed_units() == sorted(
+        (s, t) for s in led.validated_steps for t in suite.task_names)
+    replayed = replay_ledger(led.rows(), control.cfg,
+                             expected_tasks=suite.task_names,
+                             group="completion")
+    online = [e.to_json() for e in control.events.decisions()]
+    offline = [e.to_json() for e in replayed.events.decisions()]
+    assert online == offline, "fleet decisions must replay byte-identically"
+    print(f"[fleet] {len(online)} control decisions replayed "
+          f"byte-identically from the ledger")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,15 @@ and the toolkit owns everything else: directory watching, corpus encoding,
 retrieval, metrics, reporting.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Fleet validation: this example runs ONE validator; to scale validation
+across N (possibly heterogeneous) workers, the same ledger doubles as a
+claimable (step, task) work queue — run N copies of
+``python -m repro.core.cli --worker`` against one checkpoint dir (or
+``python -m repro.launch.fleet --workers N -- <worker argv>``), and see
+``examples/fleet_validation.py`` for the full walkthrough: 1 trainer +
+2 capability-tagged workers + control plane, with crash-safe lease
+reclaim and byte-identical offline replay of every fleet decision.
 """
 
 import os

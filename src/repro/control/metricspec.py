@@ -80,16 +80,27 @@ class MetricSpec:
         return sum(w * self._lookup(k, metrics) for w, k in self.terms)
 
 
-def flatten_rows(rows, expected_tasks=None, with_context=False):
+def flatten_rows(rows, expected_tasks=None, with_context=False,
+                 group="consecutive"):
     """Group per-(step, task) ledger rows back into per-step flat metric
     dicts — the observation stream the control plane consumed online.
 
-    A suite records every task's row for a step consecutively, so
-    CONSECUTIVE rows with the same step form one observation (two visits to
-    the same step at different times stay two observations, preserving
-    decision order).  Schema-v1 rows (no ``"task"``) are the ``default``
-    task, whose metrics keep their bare names — a v1 ledger replays
-    byte-identically to its pre-suite decisions.
+    ``group="consecutive"`` (single-validator ledgers): a suite records
+    every task's row for a step consecutively, so CONSECUTIVE rows with the
+    same step form one observation (two visits to the same step at
+    different times stay two observations, preserving decision order).
+    Schema-v1 rows (no ``"task"``) are the ``default`` task, whose metrics
+    keep their bare names — a v1 ledger replays byte-identically to its
+    pre-suite decisions.
+
+    ``group="completion"`` (fleet ledgers): N workers interleave rows of
+    DIFFERENT steps, so consecutive grouping would shred observations.
+    Rows accumulate per step instead, and the observation is emitted at the
+    position of the row that COMPLETES the expected task set — exactly when
+    the online fleet supervisor fed it to the controller, so online and
+    replayed decision sequences match byte-for-byte.  Requires
+    ``expected_tasks``; rows left incomplete (in flight, or crash-torn) are
+    dropped.
 
     ``expected_tasks`` (the suite's task names) drops observations missing
     any expected task's row: a partially-recorded step (crash between a
@@ -100,26 +111,56 @@ def flatten_rows(rows, expected_tasks=None, with_context=False):
 
     ``with_context=True`` returns ``(step, flat, context)`` triples, where
     ``context`` is the provenance payload the online controller attached to
-    its events (``{"engine", "score_dtype"}``, joined across the group's
-    rows exactly like :class:`~repro.core.suite.SuiteResult` joins them) —
-    or ``None`` when no row in the group carries either key, so replaying a
-    pre-provenance ledger emits byte-identical events."""
+    its events (``{"engine", "score_dtype"}`` — plus ``"worker_id"`` when
+    the rows carry fleet attribution — joined across the group's rows
+    exactly like :class:`~repro.core.suite.SuiteResult` joins them) — or
+    ``None`` when no row in the group carries any of those keys, so
+    replaying a pre-provenance ledger emits byte-identical events."""
     out: List[Tuple[int, Dict[str, float], set, list]] = []
-    for row in rows:
-        step = int(row["step"])
+
+    def absorb(bucket, row):
+        _, flat, tasks, raws = bucket
         task = str(row.get("task", "default"))
-        if not out or out[-1][0] != step:
-            out.append((step, {}, set(), []))
-        _, flat, tasks, raws = out[-1]
         tasks.add(task)
         raws.append(row)
         for m, v in row.get("metrics", {}).items():
             if task == "default":
                 flat[m] = v
             flat[f"{task}:{m}"] = v
-    if expected_tasks is not None:
+
+    if group == "consecutive":
+        for row in rows:
+            if "kind" in row:       # fleet claim records (workqueue schema)
+                continue            # are not observations
+            step = int(row["step"])
+            if not out or out[-1][0] != step:
+                out.append((step, {}, set(), []))
+            absorb(out[-1], row)
+        if expected_tasks is not None:
+            expected = set(expected_tasks)
+            out = [g for g in out if expected <= g[2]]
+    elif group == "completion":
+        if expected_tasks is None:
+            raise ValueError(
+                "group='completion' needs expected_tasks: completion of a "
+                "step is defined by the suite's task set")
         expected = set(expected_tasks)
-        out = [g for g in out if expected <= g[2]]
+        acc: Dict[int, tuple] = {}          # step -> in-flight bucket
+        for row in rows:
+            if "kind" in row:
+                continue
+            step = int(row["step"])
+            bucket = acc.setdefault(step, (step, {}, set(), []))
+            absorb(bucket, row)
+            if expected <= bucket[2]:
+                # this row completed the step: the observation lands HERE,
+                # in completion order; a later re-validation of the step
+                # starts a fresh bucket (a second observation, like the
+                # consecutive path's re-record handling)
+                out.append(acc.pop(step))
+    else:
+        raise ValueError(f"unknown grouping {group!r} "
+                         "(consecutive | completion)")
     if not with_context:
         return [(step, flat) for step, flat, _, _ in out]
 
@@ -129,10 +170,16 @@ def flatten_rows(rows, expected_tasks=None, with_context=False):
     result = []
     for step, flat, _, raws in out:
         ctx = None
-        if any("engine" in r or "score_dtype" in r for r in raws):
+        if any("engine" in r or "score_dtype" in r or "worker_id" in r
+               for r in raws):
             ctx = {"engine": join({str(r.get("engine", "")) for r in raws}),
                    "score_dtype": join({str(r.get("score_dtype", "f32"))
                                         for r in raws})}
+            if any("worker_id" in r for r in raws):
+                # fleet attribution: absent from pre-fleet rows, so ledgers
+                # without it keep emitting byte-identical events
+                ctx["worker_id"] = join({str(r.get("worker_id", ""))
+                                         for r in raws})
         result.append((step, flat, ctx))
     return result
 

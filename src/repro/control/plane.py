@@ -119,7 +119,8 @@ class ControlPlane:
     def stopped(self) -> bool:
         return self.earlystop is not None and self.earlystop.stopped
 
-    def rehydrate(self, rows, expected_tasks=None) -> int:
+    def rehydrate(self, rows, expected_tasks=None,
+                  group: str = "consecutive") -> int:
         """Warm the selector's ranking from a previous session's
         validation-ledger rows (``ValidationLedger.rows()``).
         ``expected_tasks`` (the suite's task names) drops partially-recorded
@@ -130,12 +131,14 @@ class ControlPlane:
         idempotent (old steps are never re-validated), so without this a
         fresh selector would rank only the new session's steps and GC the
         previous session's best checkpoints.  Per-task (schema-v2) rows are
-        grouped back into per-step observations.  Early stopping is NOT
-        rehydrated — a stop verdict must come from evidence this session
+        grouped back into per-step observations (``group="completion"`` for
+        fleet ledgers, where workers interleave steps — see
+        :func:`~repro.control.metricspec.flatten_rows`).  Early stopping is
+        NOT rehydrated — a stop verdict must come from evidence this session
         gathers (a continued run deliberately gets fresh patience)."""
         n = 0
         for step, flat, ctx in flatten_rows(rows, expected_tasks,
-                                            with_context=True):
+                                            with_context=True, group=group):
             try:
                 self.selector.observe(step, flat, context=ctx)
             except KeyError:
@@ -156,6 +159,11 @@ class ControlPlane:
         context = {"engine": str(getattr(result, "engine", "")),
                    "score_dtype": str(getattr(result, "score_dtype",
                                               "f32"))}
+        wid = str(getattr(result, "worker_id", "") or "")
+        if wid:
+            # fleet attribution, keyed only when present — exactly like the
+            # ledger rows, so replay re-derives the same event payloads
+            context["worker_id"] = wid
         self.observe(result.step, result.metrics, context=context)
         if self.cfg.keep_top_k > 0 and self.ckpt_root and validator is not None:
             self.selector.gc(self.ckpt_root,
@@ -196,7 +204,8 @@ class ControlPlane:
 
 
 def replay_ledger(rows, cfg: ControlConfig, *, train_history=None,
-                  expected_tasks=None) -> ControlPlane:
+                  expected_tasks=None,
+                  group: str = "consecutive") -> ControlPlane:
     """Offline replay: re-derive the decision sequence from validation-ledger
     rows (``ValidationLedger.rows()``, insertion order).
 
@@ -205,12 +214,14 @@ def replay_ledger(rows, cfg: ControlConfig, *, train_history=None,
     ``train_history``: optional ``[(step, loss), ...]`` feed for the overfit
     detector (the trainer's logged losses).  ``expected_tasks``: the suite's
     task names, to drop crash-torn partial steps the online controller
-    never observed."""
+    never observed.  ``group="completion"`` replays a FLEET ledger, where
+    workers interleave rows across steps and an observation happens when a
+    step's last expected task row lands (the supervisor's feed order)."""
     plane = ControlPlane(None, cfg, stop_path=None, event_path=None)
     for step, loss in (train_history or []):
         plane.note_train(step, {"loss": loss})
     for step, flat, ctx in flatten_rows(rows, expected_tasks,
-                                        with_context=True):
+                                        with_context=True, group=group):
         try:
             plane.observe(step, flat, context=ctx)
         except KeyError:

@@ -69,6 +69,58 @@ def load_texts(paths):
     return out
 
 
+def _worker_main(args, suite, logger, ledger_path) -> int:
+    """Fleet worker mode (``--worker``): claim (step, task) units from the
+    shared ledger work queue until the backlog drains (or forever, with
+    ``--watch``).
+
+    Any worker may also DISCOVER checkpoints and publish their units —
+    publishing is idempotent, so a fleet of bare CLI workers needs no
+    dedicated supervisor (``repro.launch.fleet`` provides one that
+    additionally runs the control plane)."""
+    import jax
+
+    from repro.core.validator import ValidationLedger, ValidatorWorker
+    from repro.core.watcher import CheckpointWatcher
+    from repro.core.workqueue import WorkQueue, parse_capabilities
+
+    caps = parse_capabilities(args.capabilities)
+    caps.setdefault("mesh_size", jax.device_count())
+    worker_id = args.worker_id or f"worker-{os.getpid()}"
+    queue = WorkQueue(ledger_path, worker_id, capabilities=caps,
+                      lease_ttl=args.lease_ttl,
+                      max_abandons=args.max_abandons)
+    worker = ValidatorWorker(
+        args.ckpts_dir, suite,
+        ledger=ValidationLedger(ledger_path,
+                                expected_tasks=suite.task_names),
+        queue=queue, logger=logger, worker_id=worker_id)
+    watcher = CheckpointWatcher(args.ckpts_dir)
+    print(f"[asyncval] worker {worker_id} caps={caps} queue={ledger_path}",
+          file=sys.stderr)
+    done = 0
+    try:
+        while True:
+            for step in watcher.poll():
+                queue.publish(suite.plan_units(step))
+            if worker.run_once():
+                unit = worker.completed[-1]
+                done += 1
+                print(f"[asyncval] {worker_id} completed step {unit.step} "
+                      f"task {unit.task}", file=sys.stderr)
+                continue
+            state = queue.refresh()
+            if not args.watch and not state.claimable(caps) \
+                    and not state.blocked():
+                break               # backlog drained, nothing in flight
+            time.sleep(args.poll_interval if args.watch else 0.05)
+    except KeyboardInterrupt:
+        pass
+    print(f"[asyncval] worker {worker_id}: {done} units, "
+          f"{len(worker.errors)} errors", file=sys.stderr)
+    return 0 if not worker.errors else 1
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.core.cli")
     ap.add_argument("--query_file", nargs="+", required=True)
@@ -173,6 +225,30 @@ def main(argv=None) -> int:
     ap.add_argument("--watch", action="store_true",
                     help="keep polling for new checkpoints (async mode)")
     ap.add_argument("--poll_interval", type=float, default=5.0)
+    # -- validator fleet (repro.core.workqueue) -----------------------------
+    ap.add_argument("--worker", action="store_true",
+                    help="fleet worker mode: claim (step, task) work units "
+                         "from the shared ledger work queue instead of "
+                         "validating whole checkpoints — run N of these "
+                         "against one --ckpts_dir + ledger to scale "
+                         "validation out (see repro.launch.fleet for a "
+                         "supervisor that also runs the control plane)")
+    ap.add_argument("--worker_id", default=None,
+                    help="this worker's name in claim records and ledger "
+                         "rows (default: worker-<pid>)")
+    ap.add_argument("--capabilities", default="",
+                    help="capability tags matched against unit requirements"
+                         ", as 'name=value,...' (e.g. 'mesh_size=8,"
+                         "max_depth=100'); mesh_size defaults to the "
+                         "process's jax.device_count()")
+    ap.add_argument("--lease_ttl", type=int, default=16,
+                    help="claim lease time-to-live in ledger RECORDS (not "
+                         "seconds — no wall clock feeds fleet decisions); "
+                         "must match across the fleet")
+    ap.add_argument("--max_abandons", type=int, default=2,
+                    help="distributed retry budget: abandons of one unit "
+                         "before the fleet marks it failed; must match "
+                         "across the fleet")
     # -- convergence control plane (repro.control) --------------------------
     ap.add_argument("--policy", default="fifo",
                     choices=["fifo", "latest_first", "stride", "budget"],
@@ -343,6 +419,11 @@ def main(argv=None) -> int:
                 logdir, f"{args.run_name}_metrics.jsonl")))
     policy = BudgetPolicy() if args.policy == "budget" \
         else Policy(kind=args.policy, stride=args.stride)
+
+    if args.worker:
+        return _worker_main(args, suite, MultiLogger(*loggers),
+                            os.path.join(logdir,
+                                         f"{args.run_name}_ledger.jsonl"))
 
     control = None
     if cmetric is not None:

@@ -15,7 +15,13 @@ corrupt replay.
 from __future__ import annotations
 
 import json
-from typing import List, Optional, Tuple
+import os
+from typing import Iterable, List, Optional, Tuple
+
+try:                                    # POSIX advisory locking (Linux/macOS)
+    import fcntl
+except ImportError:                     # pragma: no cover - non-POSIX hosts
+    fcntl = None
 
 
 def read_jsonl_tolerant(path: str, *,
@@ -57,3 +63,53 @@ def truncate_torn_tail(path: str, torn_offset: Optional[int]) -> None:
     if torn_offset is not None:
         with open(path, "r+b") as f:
             f.truncate(torn_offset)
+
+
+def append_jsonl_atomic(path: str, records: Iterable[dict]) -> int:
+    """Append ``records`` as JSONL in ONE atomic, fsync'd write — safe for
+    MULTIPLE processes sharing the file (the validator-fleet work queue:
+    claim records and result rows from N workers land in one ledger).
+
+    Three guarantees, in write order:
+
+      * tail repair — if the previous appender crashed mid-write the file
+        ends in a torn fragment (no trailing newline); gluing onto it would
+        turn a recoverable torn FINAL line into unrecoverable interior
+        corruption, so the fragment is truncated away first;
+      * atomicity — the file is opened ``O_APPEND`` and all records go out
+        in a single ``os.write`` (POSIX appends are atomic w.r.t. the file
+        offset), so concurrent appenders can interleave *records* but never
+        tear one; an advisory ``flock`` additionally serializes the
+        repair-then-append sequence so two restarting workers cannot race
+        the truncation;
+      * durability — fsync before returning, matching the ledger's
+        discipline: no reader (in-process or crash-restarted) observes a
+        record that could still disappear.
+
+    Returns the number of records written."""
+    recs = list(records)
+    if not recs:
+        return 0
+    # key order is preserved (no sort_keys): result rows must serialize
+    # byte-identically to the single-writer path they replace
+    data = "".join(json.dumps(r) + "\n" for r in recs).encode()
+    fd = os.open(path, os.O_APPEND | os.O_CREAT | os.O_RDWR, 0o644)
+    try:
+        if fcntl is not None:
+            fcntl.flock(fd, fcntl.LOCK_EX)
+        size = os.fstat(fd).st_size
+        if size:
+            last = os.pread(fd, 1, size - 1)
+            if last != b"\n":
+                # previous appender died mid-write: cut back to the last
+                # complete line (the loader would have dropped the fragment
+                # anyway — repairing here keeps OUR record un-glued)
+                whole = os.pread(fd, size, 0)
+                os.ftruncate(fd, whole.rfind(b"\n") + 1)
+        os.write(fd, data)
+        os.fsync(fd)
+    finally:
+        if fcntl is not None:
+            fcntl.flock(fd, fcntl.LOCK_UN)
+        os.close(fd)
+    return len(recs)

@@ -101,6 +101,11 @@ class ValidationResult:
     # like `engine`, so mixed-precision histories audit and replay offline.
     score_dtype: str = "f32"
     task: str = "default"
+    # which fleet worker scored this row ("" outside fleet mode — the key is
+    # then omitted from the ledger row, keeping single-process ledgers
+    # byte-identical to pre-fleet ones); threaded like `engine` so
+    # mixed-fleet ledgers are auditable offline.
+    worker_id: str = ""
 
 
 @dataclasses.dataclass
@@ -126,6 +131,11 @@ class ValidationTask:
     baseline_run: Optional[Dict[str, list]] = None
     metrics: Optional[tuple] = None       # None -> vcfg.metrics
     k: Optional[int] = None               # None -> vcfg.k
+    # fleet capability requirements for this task's work units (e.g.
+    # {"mesh_size": 8} pins a full-corpus sharded task to big workers);
+    # merged over the config-derived defaults in plan_units.  Ignored —
+    # harmless — outside fleet mode.
+    requires: Optional[Dict[str, Any]] = None
 
     def __post_init__(self):
         if not self.name or not isinstance(self.name, str):
@@ -198,6 +208,11 @@ class SuiteResult:
     def score_dtype(self) -> str:
         names = {getattr(r, "score_dtype", "f32")
                  for r in self.tasks.values()}
+        return names.pop() if len(names) == 1 else ",".join(sorted(names))
+
+    @property
+    def worker_id(self) -> str:
+        names = {getattr(r, "worker_id", "") for r in self.tasks.values()}
         return names.pop() if len(names) == 1 else ",".join(sorted(names))
 
 
@@ -335,6 +350,63 @@ class ValidationSuite:
         for name in self.tasks:
             self.engine(name)
 
+    # -- work-unit planning (the fleet's claimable granularity) --------------
+    def plan_units(self, step: int):
+        """The checkpoint's validation work as independently claimable
+        :class:`~repro.core.workqueue.WorkUnit`\\ s — one per task, in task
+        declaration order (``validate_params`` runs exactly this plan
+        in-line, so a fleet draining the units computes the same rows).
+
+        Each unit's capability requirements derive from the task-effective
+        config (``mesh_size`` = the validator mesh's device count, 1
+        unsharded) merged under any explicit ``ValidationTask.requires``."""
+        from repro.core.workqueue import WorkUnit
+        units = []
+        for name, task in self.tasks.items():
+            tcfg = self._task_cfg(task)
+            requires = {"mesh_size": (tcfg.mesh.devices.size
+                                      if tcfg.mesh is not None else 1)}
+            requires.update(task.requires or {})
+            units.append(WorkUnit.make(step, name, requires))
+        return units
+
+    def run_unit(self, params, unit, *, engine=None,
+                 write_runs: Optional[bool] = None) -> ValidationResult:
+        """Run ONE (step, task) work unit — the per-task body of
+        ``validate_params``, exposed so fleet workers can execute units
+        independently (two tasks of one step may run in different
+        processes; the fingerprinted mmap TokenStore cache makes the
+        shared-corpus case safe — each process maps the same pre-padded
+        bytes, see :meth:`_shared_doc_store`)."""
+        name = getattr(unit, "task", unit if isinstance(unit, str) else None)
+        if name not in self.tasks:
+            raise ValueError(f"unknown task {name!r} "
+                             f"(tasks: {', '.join(self.tasks)})")
+        step, task = int(getattr(unit, "step", 0)), self.tasks[name]
+        eng = engine if engine is not None else self.engine(name)
+        run, scores, timings = eng.run(params)
+        names = list(task.metrics)
+        if task.mode == "average_rank" and "AverageRank" not in names:
+            names.append("AverageRank")
+        m = metrics_lib.compute_metrics(run, task.qrels, names)
+        v = self.vcfg
+        do_write = v.write_run if write_runs is None else write_runs
+        if do_write and v.output_dir:
+            import os
+            os.makedirs(v.output_dir, exist_ok=True)
+            # default task keeps the legacy file name; other tasks get
+            # a task-qualified tag so runs never collide
+            tag = v.run_tag if name == "default" \
+                else f"{v.run_tag}.{name}"
+            metrics_lib.write_trec_run(
+                f"{v.output_dir}/{tag}_step{step}.trec", run, scores,
+                tag=tag)
+        return ValidationResult(
+            step=step, metrics=m, timings=timings,
+            subset_size=len(self._data[name].doc_ids),
+            engine=getattr(eng, "name", ""),
+            score_dtype=getattr(eng, "score_dtype", "f32"), task=name)
+
     # -- one checkpoint, every task -----------------------------------------
     def validate_params(self, params, step: int = 0, *, engine=None,
                         write_runs: Optional[bool] = None) -> SuiteResult:
@@ -343,7 +415,11 @@ class ValidationSuite:
         path) — the suite itself is never mutated.  ``write_runs`` overrides
         ``vcfg.write_run`` for this call (scoring passes — e.g. ensemble
         soup candidates — set it False so they never clobber a real
-        checkpoint's TREC run file)."""
+        checkpoint's TREC run file).
+
+        This IS the work-unit pipeline run in-line: ``plan_units`` then
+        ``run_unit`` per unit, in task order — a single process and a fleet
+        draining the same plan produce identical rows."""
         if engine is not None and len(self.tasks) > 1:
             # an injected engine was built over ONE task's queries/corpus;
             # scoring every task with it would silently ledger garbage
@@ -354,30 +430,9 @@ class ValidationSuite:
                 f"(tasks: {', '.join(self.tasks)}); pass per-task engines "
                 "via ValidationSuite(engines={name: engine})")
         out: Dict[str, ValidationResult] = {}
-        for name, task in self.tasks.items():
-            eng = engine if engine is not None else self.engine(name)
-            run, scores, timings = eng.run(params)
-            names = list(task.metrics)
-            if task.mode == "average_rank" and "AverageRank" not in names:
-                names.append("AverageRank")
-            m = metrics_lib.compute_metrics(run, task.qrels, names)
-            v = self.vcfg
-            do_write = v.write_run if write_runs is None else write_runs
-            if do_write and v.output_dir:
-                import os
-                os.makedirs(v.output_dir, exist_ok=True)
-                # default task keeps the legacy file name; other tasks get
-                # a task-qualified tag so runs never collide
-                tag = v.run_tag if name == "default" \
-                    else f"{v.run_tag}.{name}"
-                metrics_lib.write_trec_run(
-                    f"{v.output_dir}/{tag}_step{step}.trec", run, scores,
-                    tag=tag)
-            out[name] = ValidationResult(
-                step=step, metrics=m, timings=timings,
-                subset_size=len(self._data[name].doc_ids),
-                engine=getattr(eng, "name", ""),
-                score_dtype=getattr(eng, "score_dtype", "f32"), task=name)
+        for unit in self.plan_units(step):
+            out[unit.task] = self.run_unit(params, unit, engine=engine,
+                                           write_runs=write_runs)
         return SuiteResult(step=step, tasks=out)
 
 

@@ -12,18 +12,19 @@ protection (a checkpoint is deletable only once validated).
 
 from __future__ import annotations
 
-import json
+import dataclasses
 import os
 import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.ckpt import checkpoint as ckpt
-from repro.core.jsonl import read_jsonl_tolerant, truncate_torn_tail
+from repro.core.jsonl import append_jsonl_atomic, read_jsonl_tolerant
 from repro.core.reporting import BaseLogger
 from repro.core.suite import (SuiteResult, ValidationResult,
                               params_from_checkpoint)
 from repro.core.watcher import CheckpointWatcher, Policy
+from repro.core.workqueue import WorkQueue, WorkUnit
 
 
 class ValidationLedger:
@@ -45,6 +46,16 @@ class ValidationLedger:
     Crash tolerance: a process killed mid-append leaves a torn final line;
     load ignores exactly that (the unledgered step is simply re-validated).
     A torn line anywhere ELSE means real corruption and still raises.
+
+    Fleet sibling records: a validator fleet stores its work-queue claim
+    protocol in this SAME file as ``"kind"``-keyed sibling records —
+    ``unit`` / ``claim`` / ``renew`` / ``complete`` / ``abandon`` /
+    ``tick`` (full schema documented in :mod:`repro.core.workqueue`).
+    Result rows never carry a ``"kind"`` key, so this loader (and every
+    pre-fleet consumer) skips claim records by that single test; a
+    solo validator writes none, keeping its ledger byte-identical to the
+    pre-fleet format.  Fleet rows additionally carry ``"worker_id"``
+    attribution — omitted when empty, so solo rows are unchanged.
 
     Concurrency-safe: the control plane (selector / early-stop / GC) reads
     this ledger from the validator thread while ``record`` may run — a lock
@@ -71,7 +82,11 @@ class ValidationLedger:
             rows, self._torn_offset = read_jsonl_tolerant(path,
                                                           kind="ledger row")
             for rec in rows:
-                self._ingest(rec)
+                # fleet claim records (see repro.core.workqueue) live in the
+                # same file as sibling record types; only kind-less rows are
+                # validation results
+                if "kind" not in rec:
+                    self._ingest(rec)
 
     def _ingest(self, rec: dict) -> None:
         step = int(rec["step"])
@@ -130,30 +145,193 @@ class ValidationLedger:
         results = list(result.tasks.values()) \
             if isinstance(result, SuiteResult) or hasattr(result, "tasks") \
             else [result]
-        recs = [{"step": r.step,
-                 "task": str(getattr(r, "task", "default")),
-                 "metrics": r.metrics, "timings": r.timings,
-                 "subset_size": r.subset_size,
-                 # which data path scored this step — lets a cross-mode
-                 # parity audit (streaming vs materialized vs sharded)
-                 # attribute every ledger row long after the run.
-                 "engine": getattr(r, "engine", ""),
-                 # scoring precision of the row, recorded like `engine` so
-                 # replay_ledger and cross-precision audits work offline.
-                 "score_dtype": str(getattr(r, "score_dtype", "f32"))}
-                for r in results]
+        recs = []
+        for r in results:
+            rec = {"step": r.step,
+                   "task": str(getattr(r, "task", "default")),
+                   "metrics": r.metrics, "timings": r.timings,
+                   "subset_size": r.subset_size,
+                   # which data path scored this step — lets a cross-mode
+                   # parity audit (streaming vs materialized vs sharded)
+                   # attribute every ledger row long after the run.
+                   "engine": getattr(r, "engine", ""),
+                   # scoring precision of the row, recorded like `engine` so
+                   # replay_ledger and cross-precision audits work offline.
+                   "score_dtype": str(getattr(r, "score_dtype", "f32"))}
+            # fleet provenance: which worker scored the row.  Only present
+            # when a worker stamped it — single-process ledgers stay
+            # byte-identical to pre-fleet ones.
+            wid = str(getattr(r, "worker_id", "") or "")
+            if wid:
+                rec["worker_id"] = wid
+            recs.append(rec)
         with self._lock:
             for rec in recs:
                 self._ingest(rec)
             if self.path:
-                if self._torn_offset is not None:   # writer-side repair
-                    truncate_torn_tail(self.path, self._torn_offset)
-                    self._torn_offset = None
-                with open(self.path, "a") as f:
-                    for rec in recs:
-                        f.write(json.dumps(rec) + "\n")
-                    f.flush()
-                    os.fsync(f.fileno())
+                # atomic multi-writer append: fleet workers share one ledger
+                # file, and append_jsonl_atomic also performs the writer-side
+                # torn-tail repair the explicit truncate used to do
+                self._torn_offset = None
+                append_jsonl_atomic(self.path, recs)
+
+
+class ValidatorWorker:
+    """Executes validation work — the fleet's unit of scale.
+
+    One worker = one process (or thread) with its own restore shardings,
+    engine override, and capability tags.  Two modes share one execution
+    body, so solo and fleet validation are the same code path:
+
+      * **whole-step** (:meth:`run_step`): restore → every suite task →
+        ledger rows.  The single-process :class:`AsyncValidator` is a thin
+        instantiation over this.
+      * **fleet** (:meth:`run_once` / :meth:`run_forever`): claim ONE
+        (step, task) unit from the shared :class:`~repro.core.workqueue.
+        WorkQueue`, heartbeat the lease while the engine runs, append the
+        result row, mark the unit complete.  Failures abandon the unit so a
+        peer retries it — the queue's abandon count is the DISTRIBUTED
+        retry budget, derived from the ledger, never from worker state.
+
+    ``worker_id`` stamps every ledger row this worker appends (omitted when
+    empty, keeping single-process ledgers byte-identical to pre-fleet
+    ones)."""
+
+    def __init__(self, ckpt_root: str, pipeline, *,
+                 ledger: Optional[ValidationLedger] = None,
+                 queue: Optional[WorkQueue] = None,
+                 logger: Optional[BaseLogger] = None,
+                 params_extractor: Callable = params_from_checkpoint,
+                 shardings: Any = None,
+                 engine: Any = None,
+                 worker_id: str = "",
+                 heartbeat_interval_s: float = 0.25):
+        self.ckpt_root = ckpt_root
+        self.pipeline = pipeline
+        self.queue = queue
+        self.logger = logger
+        self.params_extractor = params_extractor
+        self.shardings = shardings
+        self.engine = engine
+        self.worker_id = str(worker_id
+                             or (queue.worker_id if queue is not None
+                                 else ""))
+        self.heartbeat_interval_s = heartbeat_interval_s
+        expected = tuple(getattr(pipeline, "task_names", ())
+                         or ("default",))
+        self.ledger = ledger if ledger is not None \
+            else ValidationLedger(None, expected_tasks=expected)
+        self.errors: List[tuple] = []
+        self.completed: List[WorkUnit] = []
+        # last restored checkpoint, so the N units of one step (and the
+        # whole-step path) pay the restore cost once
+        self._params_step: Optional[int] = None
+        self._params: Any = None
+
+    # -- shared execution body ---------------------------------------------
+    def load_params(self, step: int):
+        if self._params_step != step:
+            state, _ = ckpt.restore(self.ckpt_root, step,
+                                    shardings=self.shardings)
+            self._params = self.params_extractor(state)
+            self._params_step = step
+        return self._params
+
+    def _stamp(self, result):
+        """Attach this worker's id to every row of ``result`` (no-op for
+        anonymous single-process workers: rows stay bit-identical)."""
+        if not self.worker_id:
+            return result
+        if hasattr(result, "tasks"):            # SuiteResult
+            return dataclasses.replace(result, tasks={
+                n: dataclasses.replace(r, worker_id=self.worker_id)
+                for n, r in result.tasks.items()})
+        return dataclasses.replace(result, worker_id=self.worker_id)
+
+    def log_result(self, result) -> None:
+        if self.logger is None:
+            return
+        # reporter schema: bare names for the default task, task-qualified
+        # for the rest (no default: duplicates)
+        logmet = getattr(result, "log_metrics", result.metrics)
+        self.logger.log(result.step,
+                        {**logmet, **result.timings,
+                         "subset_size": result.subset_size,
+                         "engine": getattr(result, "engine", ""),
+                         "score_dtype": getattr(result, "score_dtype",
+                                                "f32")})
+
+    def run_step(self, step: int):
+        """Whole-checkpoint validation: restore, run EVERY suite task
+        in-line, append the ledger rows.  Raises on failure with nothing
+        recorded — retry policy belongs to the caller (the AsyncValidator's
+        watcher requeue, or the fleet's abandon budget)."""
+        params = self.load_params(step)
+        result = self._stamp(self.pipeline.validate_params(
+            params, step=step, engine=self.engine))
+        self.ledger.record(result)
+        return result
+
+    # -- fleet claim loop ---------------------------------------------------
+    def execute_unit(self, unit: WorkUnit) -> ValidationResult:
+        """Run ONE claimed (step, task) unit, heartbeating the lease (renew
+        records) while the engine runs so it cannot expire mid-flight."""
+        params = self.load_params(unit.step)
+        stop_hb = threading.Event()
+        hb = threading.Thread(target=self._heartbeat, args=(unit, stop_hb),
+                              daemon=True)
+        hb.start()
+        try:
+            result = self._stamp(self.pipeline.run_unit(
+                params, unit, engine=self.engine))
+        finally:
+            stop_hb.set()
+            hb.join()
+        self.ledger.record(result)
+        self.queue.complete(unit)   # after the row: a complete has a result
+        self.log_result(result)
+        self.completed.append(unit)
+        return result
+
+    def _heartbeat(self, unit: WorkUnit, stop_evt: threading.Event) -> None:
+        while not stop_evt.wait(self.heartbeat_interval_s):
+            try:
+                self.queue.renew(unit)
+            except Exception:   # a failed heartbeat must not kill the run
+                pass
+
+    def run_once(self) -> int:
+        """One scheduling round: claim and execute at most one unit.
+        Returns 1 when a unit completed, 0 otherwise (appending a tick when
+        peers hold live leases, so a DEAD peer's lease can age out — seq is
+        the clock)."""
+        if self.queue is None:
+            raise RuntimeError("fleet mode requires a WorkQueue")
+        state = self.queue.refresh()
+        for unit in state.claimable(self.queue.capabilities):
+            if not self.queue.try_claim(unit):
+                continue                    # raced a peer and lost
+            try:
+                self.execute_unit(unit)
+            except Exception as e:          # release it for a peer to retry
+                self.errors.append((unit.step, f"{unit.task}: {e!r}"))
+                self.queue.abandon(unit, error=repr(e))
+                return 0
+            return 1
+        if state.blocked():
+            self.queue.tick()
+        return 0
+
+    def run_forever(self, stop_event: threading.Event, *,
+                    idle_wait_s: float = 0.05,
+                    drained: Optional[Callable[[], bool]] = None) -> None:
+        """Claim loop until ``stop_event`` is set, or ``drained()`` reports
+        the backlog empty during an idle round."""
+        while not stop_event.is_set():
+            if self.run_once() == 0:
+                if drained is not None and drained():
+                    return
+                stop_event.wait(idle_wait_s)
 
 
 class AsyncValidator:
@@ -163,7 +341,15 @@ class AsyncValidator:
     — a :class:`~repro.core.suite.ValidationSuite` (per-task ledger rows),
     the deprecated single-task ``ValidationPipeline`` shim, or a custom
     object.  Its optional ``task_names`` attribute defines ledger-completion
-    semantics (absent -> the single ``"default"`` task)."""
+    semantics (absent -> the single ``"default"`` task).
+
+    Since the fleet refactor this is a THIN single-worker instantiation of
+    :class:`ValidatorWorker`: the watcher/retry/cap/controller loop lives
+    here, execution (restore → validate → ledger) lives on ``self.worker``.
+    Pass ``workqueue`` to make GC respect in-flight claims from OTHER
+    workers sharing the ledger (``worker_id`` then stamps this validator's
+    rows); without one, behaviour — including ledger bytes — is identical
+    to the pre-fleet validator."""
 
     def __init__(self, ckpt_root: str, pipeline, *,
                  logger: Optional[BaseLogger] = None,
@@ -175,27 +361,33 @@ class AsyncValidator:
                  shardings: Any = None,
                  engine: Any = None,
                  max_retries: int = 2,
-                 controller: Any = None):
+                 controller: Any = None,
+                 workqueue: Optional[WorkQueue] = None,
+                 worker_id: str = ""):
         self.ckpt_root = ckpt_root
-        self.pipeline = pipeline
-        # engine injection: swap the validation data path (streaming /
-        # materialized / custom) for THIS validator's runs without rebuilding
-        # — or mutating — the pipeline's subset, stores, or metric plumbing.
-        self.engine = engine
-        self.logger = logger
         self.watcher = CheckpointWatcher(ckpt_root, policy=policy)
         self.max_num_valid = max_num_valid
         # completion = a row for every suite task (single-task pipelines and
         # doubles fall back to the one "default" task = v1 semantics)
         expected = tuple(getattr(pipeline, "task_names", ()) or ("default",))
-        self.ledger = ValidationLedger(ledger_path, expected_tasks=expected)
+        self.workqueue = workqueue
+        # engine injection (the `engine` kwarg): swap the validation data
+        # path (streaming / materialized / custom) for THIS validator's runs
+        # without rebuilding — or mutating — the pipeline's subset, stores,
+        # or metric plumbing.
+        self.worker = ValidatorWorker(
+            ckpt_root, pipeline,
+            ledger=ValidationLedger(ledger_path, expected_tasks=expected),
+            queue=workqueue, logger=logger,
+            params_extractor=params_extractor, shardings=shardings,
+            engine=engine, worker_id=worker_id)
         self.poll_interval_s = poll_interval_s
-        self.params_extractor = params_extractor
-        self.shardings = shardings      # validator-mesh layout (elastic)
         self.results: List[ValidationResult] = []
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
-        self.errors: List[tuple] = []
+        # one shared fault list: worker execution faults and loop-level
+        # faults (retry exhaustion, controller bugs) land together
+        self.errors: List[tuple] = self.worker.errors
         # failed-step retry budget: a checkpoint that fails validation is
         # requeued (the watcher marked it seen when poll() handed it out, so
         # without this it would be permanently swallowed); after max_retries
@@ -208,6 +400,51 @@ class AsyncValidator:
         # the validator thread; controller faults are captured in ``errors``
         # so a control bug can never take validation down.
         self.controller = controller
+
+    # -- thin-instantiation aliases (execution state lives on the worker) --
+    @property
+    def pipeline(self):
+        return self.worker.pipeline
+
+    @pipeline.setter
+    def pipeline(self, value):
+        self.worker.pipeline = value
+
+    @property
+    def engine(self):
+        return self.worker.engine
+
+    @engine.setter
+    def engine(self, value):
+        self.worker.engine = value
+
+    @property
+    def logger(self):
+        return self.worker.logger
+
+    @logger.setter
+    def logger(self, value):
+        self.worker.logger = value
+
+    @property
+    def ledger(self) -> ValidationLedger:
+        return self.worker.ledger
+
+    @property
+    def params_extractor(self):
+        return self.worker.params_extractor
+
+    @params_extractor.setter
+    def params_extractor(self, value):
+        self.worker.params_extractor = value
+
+    @property
+    def shardings(self):
+        return self.worker.shardings    # validator-mesh layout (elastic)
+
+    @shardings.setter
+    def shardings(self, value):
+        self.worker.shardings = value
 
     # -- core single-pass --------------------------------------------------
     def validate_pending(self) -> int:
@@ -236,11 +473,8 @@ class AsyncValidator:
             if step in self.ledger:
                 continue
             try:
-                state, _ = ckpt.restore(self.ckpt_root, step,
-                                        shardings=self.shardings)
-                params = self.params_extractor(state)
-                result = self.pipeline.validate_params(params, step=step,
-                                                       engine=self.engine)
+                # restore → validate → ledger rows, on the worker
+                result = self.worker.run_step(step)
             except Exception as e:      # validation must never kill training
                 self.errors.append((step, repr(e)))
                 n_fail = self._failures.get(step, 0) + 1
@@ -251,23 +485,12 @@ class AsyncValidator:
                     self.watcher.mark_seen(step)
                 continue
             self._failures.pop(step, None)
-            self.ledger.record(result)
             self.results.append(result)
             # adaptive scheduling feedback (BudgetPolicy): observed
             # validation latency drives the stride controller.
             self.watcher.policy.observe_latency(
                 float(result.timings.get("total_s", 0.0)))
-            if self.logger is not None:
-                # reporter schema: bare names for the default task, task-
-                # qualified for the rest (no default: duplicates)
-                logmet = getattr(result, "log_metrics", result.metrics)
-                self.logger.log(step, {**logmet, **result.timings,
-                                       "subset_size": result.subset_size,
-                                       "engine": getattr(result, "engine",
-                                                         ""),
-                                       "score_dtype": getattr(result,
-                                                              "score_dtype",
-                                                              "f32")})
+            self.worker.log_result(result)
             if self.controller is not None:
                 try:
                     self.controller.on_result(result, self)
@@ -291,14 +514,44 @@ class AsyncValidator:
         self._thread = threading.Thread(target=loop, daemon=True)
         self._thread.start()
 
-    def stop(self, *, drain: bool = True) -> None:
-        """Signal shutdown; with drain=True validate whatever is committed."""
+    def stop(self, *, drain: bool = True,
+             drain_timeout: Optional[float] = None) -> None:
+        """Signal shutdown; with drain=True validate whatever is committed.
+
+        ``drain_timeout`` (seconds) bounds the WHOLE shutdown — the loop
+        join and the final drain pass — so a wedged engine run cannot hang
+        it forever.  On expiry the timeout is surfaced in ``errors`` (key
+        ``"stop"``) and the wedged daemon thread is abandoned; whatever it
+        eventually ledgers is still idempotent on restart."""
         self._stop.set()
+        deadline = None if drain_timeout is None \
+            else time.monotonic() + drain_timeout
         if self._thread is not None:
-            self._thread.join()
+            self._thread.join(timeout=drain_timeout)
+            if self._thread.is_alive():
+                self.errors.append(
+                    ("stop", f"drain timed out after {drain_timeout}s "
+                             "waiting for the validation loop"))
+                self._thread = None
+                return
             self._thread = None
-        if drain:
+        if not drain:
+            return
+        if deadline is None:
             self.validate_pending()
+            return
+        t = threading.Thread(target=self._drain_guarded, daemon=True)
+        t.start()
+        t.join(timeout=max(0.0, deadline - time.monotonic()))
+        if t.is_alive():
+            self.errors.append(
+                ("stop", f"drain timed out after {drain_timeout}s"))
+
+    def _drain_guarded(self) -> None:
+        try:
+            self.validate_pending()
+        except Exception as e:          # surfaced, never raised at shutdown
+            self.errors.append(("stop", f"drain: {e!r}"))
 
     # -- single-GPU mode (paper: run after training completes) -------------
     def validate_all_existing(self) -> List[ValidationResult]:
@@ -311,7 +564,15 @@ class AsyncValidator:
         policy.  Failed-but-retrying (and given-up) steps stay protected;
         policy-skipped ones (stale/off-stride/over-budget) will never be
         validated, so protecting them would leak storage forever under
-        skipping policies."""
+        skipping policies.
+
+        With a fleet ``workqueue`` attached, steps under a LIVE lease held
+        by ANY worker are additionally protected: a peer may be mid-restore
+        on that checkpoint, and GC'ing it would turn its crash-safe claim
+        into a spurious failure."""
         committed = set(ckpt.list_steps(self.ckpt_root))
-        return committed - set(self.ledger.validated_steps) \
+        protected = committed - set(self.ledger.validated_steps) \
             - self.watcher.skipped
+        if self.workqueue is not None:
+            protected |= committed & self.workqueue.refresh().claimed_steps()
+        return protected

@@ -18,6 +18,7 @@ checkpoint cadence at scale):
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import List, Optional, Set
 
@@ -124,12 +125,43 @@ class CheckpointWatcher:
         # steps that failed — those stay protected.
         self._skipped: Set[int] = set()
         self._last_arrival_t: Optional[float] = None
+        # dir names already observed committed: commitment is monotonic (a
+        # COMMIT marker never disappears while the dir exists), so each poll
+        # only stats entries NOT yet known committed — O(new) stat calls per
+        # tick instead of O(all checkpoints), which matters once a long run
+        # has accumulated thousands of step dirs.
+        self._committed_names: Set[str] = set()
         if skip_existing:
-            self._seen.update(ckpt.list_steps(root))
+            self._seen.update(self._list_committed())
+
+    def _list_committed(self) -> List[int]:
+        """Committed steps, ascending — ``ckpt.list_steps`` semantics with
+        the known-committed cache (see ``_committed_names``) so repeated
+        polling of a large root stays cheap."""
+        if not os.path.isdir(self.root):
+            return []
+        names = os.listdir(self.root)
+        # GC'd checkpoints drop out of the cache with their dirs, so a step
+        # re-using a name later (restart from an earlier step) is re-statted
+        self._committed_names &= set(names)
+        steps = []
+        for name in names:
+            if not name.startswith(ckpt.STEP_PREFIX) \
+                    or name.endswith(".tmp"):
+                continue
+            try:
+                step = int(name[len(ckpt.STEP_PREFIX):])
+            except ValueError:
+                continue
+            if name in self._committed_names \
+                    or ckpt.is_committed(os.path.join(self.root, name)):
+                self._committed_names.add(name)
+                steps.append(step)
+        return sorted(steps)
 
     def poll(self) -> List[int]:
         """New committed steps since the last poll, policy-ordered."""
-        steps = [s for s in ckpt.list_steps(self.root) if s not in self._seen]
+        steps = [s for s in self._list_committed() if s not in self._seen]
         if steps:
             now = time.monotonic()
             if self._last_arrival_t is not None:
