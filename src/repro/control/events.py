@@ -16,10 +16,16 @@ Events split into two classes:
 
   * decisions  (``select``, ``stop``) — pure outputs of the controllers;
     byte-identical under offline replay.
-  * actuations (``gc``, ``ensemble``, ``stop_marker``) — side effects on the
-    filesystem (deletions, marker files, virtual checkpoints).  Recorded for
-    audit but excluded from replay comparison: they depend on external state
-    (what was committed/protected at that instant).
+  * actuations (``gc``, ``ensemble``, ``stop_marker``, and the serving
+    tier's ``swap`` / ``swap_failed``) — side effects on the filesystem or
+    the live serving index.  Recorded for audit but excluded from replay
+    comparison: they depend on external state (what was committed/
+    protected/buildable at that instant).
+
+The serving tier (repro.serve) keeps its swap events in a SEPARATE
+ControlEventLog file from the control plane's decisions — the promoter
+tails the decision log read-only and appends actuations to its own, so
+offline decision replay never has to skip interleaved serve traffic.
 """
 
 from __future__ import annotations
@@ -31,7 +37,10 @@ import threading
 from typing import Iterator, List, Optional
 
 DECISION_KINDS = frozenset({"select", "stop"})
-ACTUATION_KINDS = frozenset({"gc", "ensemble", "stop_marker"})
+ACTUATION_KINDS = frozenset({"gc", "ensemble", "stop_marker",
+                             # serving tier (repro.serve.promoter): live
+                             # index hot-swaps and aborted promotions
+                             "swap", "swap_failed"})
 
 
 @dataclasses.dataclass(frozen=True)

@@ -296,6 +296,28 @@ def main(argv=None) -> int:
                          "this validator-only CLI (0 = off)")
     ap.add_argument("--stop_file", default=None,
                     help="STOP marker path (default: <logging_dir>/STOP)")
+    # -- retrieval serving tier (repro.serve) -------------------------------
+    ap.add_argument("--serve", action="store_true",
+                    help="serve queries against promoted checkpoints "
+                         "through the validator's exact scoring path: "
+                         "one-shot mode answers --query_file once after "
+                         "validation; --watch keeps a promoter hot-"
+                         "swapping the live index on every control-plane "
+                         "'select' (zero downtime, and the serving "
+                         "checkpoint is GC-protected)")
+    ap.add_argument("--serve_k", type=int, default=10,
+                    help="results per served query")
+    ap.add_argument("--serve_batch", type=int, default=8,
+                    help="query micro-batch size (one fixed-shape "
+                         "compiled encode program)")
+    ap.add_argument("--serve_flush_ms", type=float, default=4.0,
+                    help="max-latency flush for partial micro-batches")
+    ap.add_argument("--serve_pending", type=int, default=256,
+                    help="admission bound on in-flight requests (beyond "
+                         "it submits fail fast instead of queueing)")
+    ap.add_argument("--serve_events", default=None,
+                    help="replayable swap-event JSONL (default: "
+                         "<logging_dir>/<run_name>_serve.jsonl)")
     ap.add_argument("--ensemble_top_k", type=int, default=0,
                     help="after validation ends, greedy-soup the top-k "
                          "checkpoints by the control metric into a virtual "
@@ -448,12 +470,46 @@ def main(argv=None) -> int:
             args.ckpts_dir, ccfg, stop_path=stop_path,
             event_path=os.path.join(logdir, f"{args.run_name}_control.jsonl"))
 
+    serve = None
+    if args.serve:
+        from repro.serve import (AdmissionController, IndexBuilder,
+                                 Promoter, QueryService, ServeConfig)
+        # the serving tier reuses the validator's exact scoring knobs —
+        # same score_dtype, same impl, same token-store geometry — so the
+        # answers it hands out are bitwise the numbers the ledger records
+        scfg = ServeConfig(k=args.serve_k, score_dtype=args.score_dtype,
+                           impl=args.impl, batch_size=args.batch_size,
+                           chunk_size=args.chunk_size,
+                           max_batch=args.serve_batch,
+                           flush_ms=args.serve_flush_ms,
+                           max_pending=args.serve_pending,
+                           token_backing=args.token_backing,
+                           mmap_dir=mmap_dir,
+                           token_fingerprint=args.token_fingerprint)
+        serve_service = QueryService(
+            spec, k=args.serve_k, max_batch=args.serve_batch,
+            flush_ms=args.serve_flush_ms,
+            admission=AdmissionController(args.serve_pending))
+        serve_promoter = Promoter(
+            IndexBuilder(spec, corpus, scfg), serve_service,
+            args.ckpts_dir,
+            # in-process control plane: promote its live best pick; without
+            # one, follow the latest committed checkpoint (promoter default)
+            target_fn=((lambda: control.selector.best_step)
+                       if control is not None else None),
+            log=args.serve_events or os.path.join(
+                logdir, f"{args.run_name}_serve.jsonl"))
+        serve = (serve_service, serve_promoter)
+
     validator = AsyncValidator(
         args.ckpts_dir, suite, logger=MultiLogger(*loggers),
         policy=policy, controller=control,
         max_num_valid=args.max_num_valid,
         ledger_path=os.path.join(logdir, f"{args.run_name}_ledger.jsonl"),
-        poll_interval_s=args.poll_interval)
+        poll_interval_s=args.poll_interval,
+        # quality GC must never delete the checkpoint backing the live
+        # (or mid-promotion) serving index
+        extra_protect=serve[1].protect_set if serve is not None else None)
     if control is not None:
         # restart: warm the ranking from the prior session's ledger rows —
         # old steps are never re-validated (idempotency), and a cold
@@ -472,6 +528,11 @@ def main(argv=None) -> int:
                         print(f"[asyncval] step {r.step}: "
                               f"{getattr(r, 'log_metrics', r.metrics)} "
                               f"({r.timings['total_s']:.1f}s)")
+                if serve is not None and serve[1].poll_once():
+                    # zero-downtime promotion: old index answered every
+                    # query while this build/verify ran
+                    print(f"[serve] hot-swap -> step "
+                          f"{serve[0].live_step()}", file=sys.stderr)
                 if control is not None and control.stopped and n == 0:
                     # trainer-side STOP is published; the backlog is drained
                     print("[asyncval] early stop "
@@ -487,6 +548,21 @@ def main(argv=None) -> int:
             print(f"[asyncval] step {r.step}: "
                   f"{getattr(r, 'log_metrics', r.metrics)} "
                   f"({r.timings['total_s']:.1f}s)")
+
+    if serve is not None:
+        serve_service, serve_promoter = serve
+        serve_promoter.poll_once()       # one-shot: promote the final pick
+        if serve_service.live is None:
+            print("[serve] no promotable checkpoint; skipping serve pass",
+                  file=sys.stderr)
+        else:
+            resp = serve_service.answer(sorted(queries.items()))
+            lat = sorted(r.latency_s for r in resp)
+            p50 = lat[len(lat) // 2] * 1e3
+            p99 = lat[min(len(lat) - 1, int(len(lat) * 0.99))] * 1e3
+            print(f"[serve] answered {len(resp)} queries: "
+                  f"p50={p50:.2f}ms p99={p99:.2f}ms "
+                  f"step={serve_service.live_step()}")
 
     if control is not None and args.ensemble_top_k:
         from repro.control import MetricSpec

@@ -363,7 +363,8 @@ class AsyncValidator:
                  max_retries: int = 2,
                  controller: Any = None,
                  workqueue: Optional[WorkQueue] = None,
-                 worker_id: str = ""):
+                 worker_id: str = "",
+                 extra_protect: Optional[Callable[[], set]] = None):
         self.ckpt_root = ckpt_root
         self.watcher = CheckpointWatcher(ckpt_root, policy=policy)
         self.max_num_valid = max_num_valid
@@ -400,6 +401,10 @@ class AsyncValidator:
         # the validator thread; controller faults are captured in ``errors``
         # so a control bug can never take validation down.
         self.controller = controller
+        # additional GC protections beyond validation state — e.g. the
+        # serving tier passes Promoter.protect_set so quality GC can never
+        # delete the checkpoint backing the LIVE index (or one mid-swap)
+        self.extra_protect = extra_protect
 
     # -- thin-instantiation aliases (execution state lives on the worker) --
     @property
@@ -569,10 +574,16 @@ class AsyncValidator:
         With a fleet ``workqueue`` attached, steps under a LIVE lease held
         by ANY worker are additionally protected: a peer may be mid-restore
         on that checkpoint, and GC'ing it would turn its crash-safe claim
-        into a spurious failure."""
+        into a spurious failure.
+
+        ``extra_protect`` (constructor hook) unions in protections outside
+        validation's own state — the serving tier's live/promoting
+        checkpoints being the canonical case."""
         committed = set(ckpt.list_steps(self.ckpt_root))
         protected = committed - set(self.ledger.validated_steps) \
             - self.watcher.skipped
         if self.workqueue is not None:
             protected |= committed & self.workqueue.refresh().claimed_steps()
+        if self.extra_protect is not None:
+            protected |= set(self.extra_protect())
         return protected

@@ -124,8 +124,12 @@ class FleetSupervisor:
                  policy: Optional[Policy] = None,
                  plan_units: Optional[Callable[[int],
                                                List[WorkUnit]]] = None,
-                 lease_ttl: int = 16, max_abandons: int = 2):
+                 lease_ttl: int = 16, max_abandons: int = 2,
+                 extra_protect: Optional[Callable[[], set]] = None):
         self.ckpt_root = ckpt_root
+        # GC protections beyond fleet state — e.g. the serving tier's
+        # Promoter.protect_set (live + mid-promotion checkpoint steps)
+        self.extra_protect = extra_protect
         self.expected_tasks = tuple(expected_tasks) or ("default",)
         self.control = control
         self.queue = WorkQueue(ledger_path, "supervisor",
@@ -176,14 +180,19 @@ class FleetSupervisor:
         """Steps GC must keep: committed but not fully validated (minus
         policy skips) — plus anything under a LIVE lease, whichever worker
         holds it: GC'ing a checkpoint mid-restore would turn a peer's
-        crash-safe claim into a spurious failure."""
+        crash-safe claim into a spurious failure.  ``extra_protect``
+        (constructor hook) unions in protections outside the fleet's own
+        state — e.g. the checkpoint backing a live serving index."""
         committed = set(ckpt.list_steps(self.ckpt_root))
         state = self.queue.refresh()
         done = {s for s in {u.step for u in
                             (st.unit for st in state.units.values())}
                 if state.step_complete(s, self.expected_tasks)}
         protected = committed - done - self.watcher.skipped
-        return protected | (committed & state.claimed_steps())
+        protected |= committed & state.claimed_steps()
+        if self.extra_protect is not None:
+            protected |= set(self.extra_protect())
+        return protected
 
     def step_complete(self, step: int) -> bool:
         return self.queue.refresh().step_complete(step, self.expected_tasks)

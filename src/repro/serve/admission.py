@@ -1,0 +1,49 @@
+"""Admission control — overload degrades by rejection, never by queueing.
+
+A serving tier with an unbounded request queue converts overload into
+unbounded latency (every queued request eventually answers, seconds late).
+The controller caps in-flight requests instead: beyond ``max_pending`` a
+submit fails fast with :class:`ServeOverloaded` and the client retries
+against fresher state.  Counters are plain observability — the benchmark's
+zero-drop gate reads ``rejected`` to prove the hot-swap path never sheds
+load (bench_serve.py sizes ``max_pending`` above its offered concurrency,
+so any rejection there means a real blackout, not admission working).
+"""
+
+from __future__ import annotations
+
+import threading
+
+
+class ServeOverloaded(RuntimeError):
+    """Raised by submits past the in-flight bound; safe to retry later."""
+
+
+class AdmissionController:
+    """Bounded in-flight request counter (thread-safe)."""
+
+    def __init__(self, max_pending: int = 256):
+        if max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        self.max_pending = int(max_pending)
+        self._lock = threading.Lock()
+        self.pending = 0
+        self.peak = 0
+        self.admitted = 0
+        self.rejected = 0
+
+    def try_acquire(self) -> bool:
+        with self._lock:
+            if self.pending >= self.max_pending:
+                self.rejected += 1
+                return False
+            self.pending += 1
+            self.admitted += 1
+            self.peak = max(self.peak, self.pending)
+            return True
+
+    def release(self) -> None:
+        with self._lock:
+            if self.pending <= 0:
+                raise RuntimeError("release() without a matching acquire")
+            self.pending -= 1

@@ -772,3 +772,86 @@ def test_fleet_survives_sigkilled_worker(fleet_filespace):
     # the survivor finished every unit the victim left behind
     by_worker = {r.get("worker_id") for r in led.rows()}
     assert "survivor" in by_worker
+
+
+# ---------------------------------------------------------------------------
+# Serving-tier GC protection: the live index's checkpoint is untouchable
+# ---------------------------------------------------------------------------
+
+def test_supervisor_extra_protect_shields_serving_checkpoint(tmp_path):
+    """The checkpoint backing the LIVE serving index (and one mid-
+    promotion) joins the supervisor's protect_set via extra_protect, even
+    after its validation completes — quality GC can never delete the
+    checkpoint queries are being answered from."""
+    from repro.launch.fleet import FleetSupervisor
+
+    root = str(tmp_path / "ck")
+    ledger_path = str(tmp_path / "ledger.jsonl")
+    pipe = _FakeFleetPipeline()
+    serving = {"steps": set()}           # stands in for Promoter.protect_set
+    sup = FleetSupervisor(root, ledger_path, pipe.task_names,
+                          plan_units=pipe.plan_units,
+                          extra_protect=lambda: serving["steps"])
+    w = _make_worker(root, ledger_path, "A", pipe, lease_ttl=32)
+    for step in (1, 2):
+        _commit_stub_ckpt(root, step)
+    sup.publish_pending()
+    while w.run_once():
+        pass
+    assert sup.step_complete(1) and sup.step_complete(2)
+    assert sup.protect_set() == set()    # fully validated, GC-eligible...
+    serving["steps"] = {1}               # ...until step 1 goes live
+    assert sup.protect_set() == {1}
+    serving["steps"] = {1, 2}            # live + in-flight promotion
+    assert sup.protect_set() == {1, 2}
+
+
+def test_async_validator_extra_protect_and_gc_end_to_end(tmp_path):
+    """End to end through the real promoter: quality-aware gc_checkpoints
+    driven by the validator's protect_set keeps the serving checkpoint on
+    disk even when its quality rank says delete it."""
+    from benchmarks.common import toy_spec, train_toy_dr
+    from repro.data import corpus as corpus_lib
+    from repro.serve import IndexBuilder, Promoter, QueryService, ServeConfig
+
+    ds = corpus_lib.synthetic_retrieval_dataset(0, n_passages=80,
+                                                n_queries=6)
+    spec = toy_spec(ds.vocab)
+    _, snaps = train_toy_dr(ds, spec, steps=40, snapshot_every=20)
+    root = str(tmp_path / "ck")
+    for step, params in snaps:
+        ckpt.save(root, step, {"params": params})
+    steps = [s for s, _ in snaps]
+
+    builder = IndexBuilder(spec, ds.corpus, ServeConfig(k=5, batch_size=32))
+    service = QueryService(spec, k=5, max_batch=4)
+    target = {"step": steps[0]}
+    promoter = Promoter(builder, service, root,
+                        target_fn=lambda: target["step"],
+                        log=str(tmp_path / "serve_events.jsonl"))
+
+    class _Done:
+        """Pipeline stub: every step counts as fully validated."""
+        task_names = ("default",)
+
+    validator = AsyncValidator(root, _Done(),
+                               extra_protect=promoter.protect_set)
+    for s in steps:
+        validator.ledger.record(ValidationResult(
+            step=s, metrics={"MRR@10": 0.01 * s},
+            timings={"total_s": 0.001}, subset_size=1, engine="fake"))
+    assert validator.protect_set() == set()      # all validated, no serving
+
+    assert promoter.poll_once()                  # steps[0] goes live
+    assert validator.protect_set() == {steps[0]}
+
+    # quality GC wants to keep only the best step -- but the live one
+    # (worst-ranked, steps[0]) must survive through protect_set
+    deleted = ckpt.gc_checkpoints(root, keep=[steps[-1]],
+                                  protect=validator.protect_set())
+    remaining = set(ckpt.list_steps(root))
+    assert steps[0] in remaining and steps[-1] in remaining
+    assert steps[0] not in deleted
+    # the survivor still answers queries from the protected checkpoint
+    qid = next(iter(ds.queries))
+    assert service.answer([(qid, ds.queries[qid])])[0].step == steps[0]
