@@ -21,8 +21,9 @@ from benchmarks.common import Timer, contrastive_step, toy_spec, train_toy_dr
 from repro.ckpt import checkpoint as ckpt
 from repro.core.pipeline import ValidationConfig, ValidationPipeline
 from repro.core.samplers import RunFileTopK
-from repro.core.validator import AsyncValidator
+from repro.core.validator import CKPT_TO_VERDICT_METRIC, AsyncValidator
 from repro.data import corpus as corpus_lib
+from repro.obs import Telemetry
 
 
 def run(n_ckpts: int = 4, steps_per_ckpt: int = 40, corpus_size: int = 1500,
@@ -40,7 +41,12 @@ def run(n_ckpts: int = 4, steps_per_ckpt: int = 40, corpus_size: int = 1500,
         pipe = ValidationPipeline(spec, ds.corpus, ds.queries, ds.qrels,
                                   vcfg, sampler=RunFileTopK(depth=depth),
                                   baseline_run=baseline)
-        validator = AsyncValidator(ckdir, pipe, poll_interval_s=0.02)
+        # metrics-only telemetry (no trace file): measures the paper's
+        # staleness number — checkpoint commit to verdict — for the async
+        # row, so BENCH_9.json tracks it across PRs
+        tel = Telemetry(None) if mode == "async" else None
+        validator = AsyncValidator(ckdir, pipe, poll_interval_s=0.02,
+                                   telemetry=tel)
         t_train, t_val = [], []
 
         with Timer() as total:
@@ -79,13 +85,19 @@ def run(n_ckpts: int = 4, steps_per_ckpt: int = 40, corpus_size: int = 1500,
         shutil.rmtree(workdir, ignore_errors=True)
 
         val_total = sum(r.timings["total_s"] for r in validator.results)
-        rows.append({
+        row = {
             "mode": mode, "total_s": total.seconds,
             "train_s": sum(t_train), "validate_s": val_total,
             "n_validated": len(validator.results),
             "mrr_last": validator.results[-1].metrics["MRR@10"]
             if validator.results else float("nan"),
-        })
+        }
+        if tel is not None:
+            hist = tel.metrics.get(CKPT_TO_VERDICT_METRIC)
+            if hist is not None and hist.count:
+                row["ckpt_to_verdict_p50_s"] = hist.percentile(50)
+                row["ckpt_to_verdict_p99_s"] = hist.percentile(99)
+        rows.append(row)
     return rows
 
 
@@ -171,6 +183,10 @@ def main():
               f"{r['train_s']:.2f},{r['validate_s']:.2f},"
               f"{r['n_validated']},{r['mrr_last']:.4f}")
     print(f"async_schedule,speedup,{speedup:.3f},,,,")
+    if "ckpt_to_verdict_p50_s" in asyn:
+        print(f"async_schedule,ckpt_to_verdict,"
+              f"{asyn['ckpt_to_verdict_p50_s']:.3f},"
+              f"{asyn['ckpt_to_verdict_p99_s']:.3f},,,")
     # pipelining law (paper Fig. 1): async ~ train + last validation
     assert asyn["total_s"] < sync["total_s"], "async must beat sync"
 

@@ -4,18 +4,42 @@ The paper: full corpus ~2 h, top-1000 ~1 h, top-100 ~10 min on MS MARCO.
 Here: wall-clock validation time across subset depths on the synthetic
 corpus — the shape of the scaling (linear in encoded passages, dominated by
 corpus encoding) is the reproduced artifact.
+
+PR 9 turns the single wall-time number into a per-stage breakdown from the
+lifecycle tracer (``repro.obs``): a traced run of the double-buffered
+streaming config prints store_build/staged/encoded/scored/recorded
+inclusive+self times, and GATES the staging idle-gap ratio (the fraction
+of the scan loop spent waiting on host→device staging) below 10% — the
+measured form of PR 2's "the device never idles on copies" claim.
 """
 
 from __future__ import annotations
 
-import time
+import os
+import shutil
+import tempfile
 
-import jax
-
-from benchmarks.common import Timer, toy_spec, train_toy_dr
-from repro.core.pipeline import ValidationConfig, ValidationPipeline
+from benchmarks.common import toy_spec, train_toy_dr
 from repro.core.samplers import FullCorpus, RunFileTopK
+from repro.core.suite import (ValidationConfig, ValidationSuite,
+                              ValidationTask)
+from repro.core.validator import ValidationLedger
 from repro.data import corpus as corpus_lib
+from repro.obs import Telemetry
+from repro.obs.export import breakdown_table, load_traces
+
+# shared CI knob: loosen timing-sensitive gates on noisy runners
+SLACK = float(os.environ.get("ASYNCVAL_BENCH_TIME_SLACK", "1.0"))
+IDLE_GATE = 0.10 * SLACK
+
+
+def _make_suite(ds, spec, sampler, baseline, *, engine: str,
+                telemetry=None) -> ValidationSuite:
+    vcfg = ValidationConfig(metrics=("MRR@10",), k=100, batch_size=128,
+                            engine=engine, telemetry=telemetry)
+    return ValidationSuite(spec, [
+        ValidationTask("default", ds.corpus, ds.queries, ds.qrels,
+                       sampler=sampler, baseline_run=baseline)], vcfg)
 
 
 def run(corpus_size: int = 4000, n_queries: int = 60,
@@ -26,28 +50,62 @@ def run(corpus_size: int = 4000, n_queries: int = 60,
     baseline = corpus_lib.lexical_baseline_run(ds, k=max(depths))
     spec = toy_spec(ds.vocab)
     params, _ = train_toy_dr(ds, spec, steps=50, seed=seed)
-    vcfg = ValidationConfig(metrics=("MRR@10",), k=100, batch_size=128,
-                            engine=engine)
 
     rows = []
     samplers = [("full", FullCorpus())] + \
         [(f"top{d}", RunFileTopK(depth=d)) for d in depths]
     for name, sampler in samplers:
-        pipe = ValidationPipeline(spec, ds.corpus, ds.queries, ds.qrels,
-                                  vcfg, sampler=sampler,
-                                  baseline_run=baseline)
-        pipe.validate_params(params)            # warm-up (jit compile)
+        suite = _make_suite(ds, spec, sampler, baseline, engine=engine)
+        suite.validate_params(params)           # warm-up (jit compile)
         times, encode_times = [], []
         for r in range(repeats):
-            res = pipe.validate_params(params, step=r)
+            res = suite.validate_params(params, step=r).tasks["default"]
             times.append(res.timings["total_s"])
             encode_times.append(res.timings["encode_corpus_s"])
         rows.append({"engine": engine, "subset": name,
-                     "size": pipe.subset.size,
+                     "size": res.subset_size,
                      "total_s": min(times),
                      "encode_s": min(encode_times),
                      "mrr": res.metrics["MRR@10"]})
     return rows
+
+
+def run_breakdown(corpus_size: int = 4000, n_queries: int = 60,
+                  seed: int = 0, repeats: int = 3):
+    """Trace full-corpus validations of the DOUBLE-BUFFERED streaming
+    config (the ValidationConfig default: staging="double_buffered",
+    depth 2); returns (trace records, post-warm-up staging idle ratios).
+
+    The warm-up run stays in the trace — it is where store_build and the
+    compile-heavy first spans live, so the printed table covers every
+    stage — but the idle-gap GATE reads only the steady-state runs."""
+    ds = corpus_lib.synthetic_retrieval_dataset(
+        seed, n_passages=corpus_size, n_queries=n_queries)
+    spec = toy_spec(ds.vocab)
+    params, _ = train_toy_dr(ds, spec, steps=50, seed=seed)
+
+    workdir = tempfile.mkdtemp(prefix="asyncval_obs_bench_")
+    trace = os.path.join(workdir, "trace.jsonl")
+    tel = Telemetry(trace, process="bench")
+    suite = _make_suite(ds, spec, FullCorpus(), None,
+                        engine="streaming", telemetry=tel)
+    ledger = ValidationLedger(os.path.join(workdir, "ledger.jsonl"),
+                              expected_tasks=suite.task_names,
+                              telemetry=tel)
+    try:
+        suite.validate_params(params)           # warm-up (jit compile)
+        tel.flush()
+        n_warm = len(load_traces([trace]))
+        for r in range(1, repeats + 1):
+            ledger.record(suite.validate_params(params, step=r))
+        tel.flush()
+        records = load_traces([trace])
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+    steady = records[n_warm:]
+    idles = [rec["idle_ratio"] for rec in steady
+             if rec["name"] == "staged"]
+    return records, idles
 
 
 def main():
@@ -68,7 +126,23 @@ def main():
     # 1e-6: separately-compiled programs may differ by an ulp in scores)
     for rs, rm in zip(by_engine["streaming"], by_engine["materialized"]):
         assert abs(rs["mrr"] - rm["mrr"]) < 1e-6, (rs, rm)
-    return by_engine["streaming"]
+
+    # per-stage breakdown from the lifecycle tracer + staging idle gate
+    records, idles = run_breakdown()
+    print("\nper-stage breakdown (traced, incl. warm-up/compile run):")
+    print(breakdown_table(records))
+    assert idles, "no steady-state staged spans traced"
+    mean_idle = sum(idles) / len(idles)
+    print(f"validation_time,staging_idle_ratio,{mean_idle:.4f},"
+          f"gate<{IDLE_GATE:.3f},,,")
+    # PR 2's double-buffering claim, continuously measured: the scan loop
+    # must spend <10% of its wall time waiting on host->device staging
+    assert mean_idle < IDLE_GATE, \
+        f"staging idle-gap {mean_idle:.3f} >= {IDLE_GATE:.3f} in the " \
+        "double-buffered config"
+    return by_engine["streaming"] + [
+        {"subset": "staging_idle", "mean_idle_ratio": mean_idle,
+         "gate": IDLE_GATE, "n_runs": len(idles)}]
 
 
 if __name__ == "__main__":

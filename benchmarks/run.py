@@ -1,16 +1,22 @@
 """Benchmark aggregator: one benchmark per paper figure + the kernel bench.
 
-    PYTHONPATH=src python -m benchmarks.run [--only name]
+    PYTHONPATH=src python -m benchmarks.run [--only name] [--json out.json]
 
 Prints CSV rows (``name,...``) per benchmark; asserts each benchmark's
-paper-claim invariants (see individual modules).  The dry-run/roofline
-tables are produced separately by ``repro.launch.dryrun`` (they need the
-512-device environment).
+paper-claim invariants (see individual modules).  Each benchmark's
+``main()`` return value (rows of dicts, or None) is collected into a
+machine-readable JSON report — ``BENCH_9.json`` next to this file by
+default — whose headline is the checkpoint-to-verdict p50/p99 from
+``bench_async_schedule``'s telemetry, so the staleness trajectory is
+tracked across PRs.  The dry-run/roofline tables are produced separately
+by ``repro.launch.dryrun`` (they need the 512-device environment).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
@@ -18,13 +24,29 @@ import traceback
 BENCHES = ("async_schedule", "fidelity", "validation_time",
            "streaming_engine", "mips_kernel")
 
+DEFAULT_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "BENCH_9.json")
+
+
+def _headline(results):
+    """Pull the cross-PR tracked numbers out of the per-bench rows."""
+    head = {}
+    for row in results.get("async_schedule") or []:
+        if isinstance(row, dict) and "ckpt_to_verdict_p50_s" in row:
+            head["ckpt_to_verdict_p50_s"] = row["ckpt_to_verdict_p50_s"]
+            head["ckpt_to_verdict_p99_s"] = row["ckpt_to_verdict_p99_s"]
+    return head
+
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default=DEFAULT_JSON,
+                    help="machine-readable report path ('' disables)")
     args = ap.parse_args()
 
     failures = []
+    results = {}
     for name in BENCHES:
         if args.only and args.only not in name:
             continue
@@ -32,12 +54,19 @@ def main() -> int:
         print(f"### bench_{name}")
         t0 = time.time()
         try:
-            mod.main()
+            results[name] = mod.main()
             print(f"### bench_{name}: OK ({time.time()-t0:.1f}s)\n")
         except Exception:
             traceback.print_exc()
             failures.append(name)
             print(f"### bench_{name}: FAILED\n")
+    if args.json:
+        report = {"benches": results, "failed": failures,
+                  **_headline(results)}
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True, default=str)
+            f.write("\n")
+        print(f"report: {args.json}")
     if failures:
         print("FAILED:", ", ".join(failures))
         return 1

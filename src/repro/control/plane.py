@@ -26,6 +26,7 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import threading
+import time
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.ckpt import checkpoint as ckpt
@@ -61,9 +62,14 @@ class ControlConfig:
 class ControlPlane:
     def __init__(self, ckpt_root: Optional[str], cfg: ControlConfig, *,
                  stop_path: Optional[str] = None,
-                 event_path: Optional[str] = None):
+                 event_path: Optional[str] = None,
+                 telemetry=None):
         self.ckpt_root = ckpt_root
         self.cfg = cfg
+        # observation only (decision latency, `selected` lifecycle events);
+        # the decision path itself stays clock-free so replay_ledger — which
+        # constructs planes without telemetry — re-derives identical events.
+        self.telemetry = telemetry
         self.events = ControlEventLog(event_path)
         self.selector = CheckpointSelector(
             SelectionConfig(metric=cfg.metric, mode=cfg.mode,
@@ -106,6 +112,23 @@ class ControlPlane:
     # -- decision path (pure; shared by online + offline replay) ------------
     def observe(self, step: int, metrics: Dict[str, float],
                 context: Optional[dict] = None) -> None:
+        tel = self.telemetry
+        if tel is None:
+            return self._observe(step, metrics, context)
+        # time the decision from OUTSIDE the fold body: the fold itself
+        # stays clock-free, so a replay plane (never given telemetry)
+        # re-derives identical decisions and events
+        before = self.selector.best_step
+        t0 = time.perf_counter()
+        self._observe(step, metrics, context)
+        tel.metrics.histogram("control.decision_s").observe(
+            time.perf_counter() - t0)
+        after = self.selector.best_step
+        if after != before:
+            tel.event("selected", step=after, prev=before, observed=step)
+
+    def _observe(self, step: int, metrics: Dict[str, float],
+                 context: Optional[dict] = None) -> None:
         decision = self.selector.observe(step, metrics, context=context)
         if self.earlystop is not None:
             # early stopping judges the SAME (EMA-smoothed) series the

@@ -69,6 +69,28 @@ def load_texts(paths):
     return out
 
 
+def _obs_finish(args, tel) -> None:
+    """Flush the trace buffer and emit the ``--obs_report`` /
+    ``--obs_metrics`` outputs: the registry summary table plus the
+    headline checkpoint-to-verdict latency percentiles."""
+    if tel is None:
+        return
+    tel.flush()
+    if args.obs_metrics:
+        tel.metrics.dump(args.obs_metrics)
+    if args.obs_report:
+        from repro.core.validator import CKPT_TO_VERDICT_METRIC
+        print(tel.metrics.render())
+        hist = tel.metrics.get(CKPT_TO_VERDICT_METRIC)
+        if hist is not None and hist.count:
+            print(f"[obs] checkpoint-to-verdict: "
+                  f"p50={hist.percentile(50):.3f}s "
+                  f"p99={hist.percentile(99):.3f}s "
+                  f"over {hist.count} verdicts")
+        else:
+            print("[obs] checkpoint-to-verdict: no verdicts observed")
+
+
 def _worker_main(args, suite, logger, ledger_path) -> int:
     """Fleet worker mode (``--worker``): claim (step, task) units from the
     shared ledger work queue until the backlog drains (or forever, with
@@ -87,15 +109,19 @@ def _worker_main(args, suite, logger, ledger_path) -> int:
     caps = parse_capabilities(args.capabilities)
     caps.setdefault("mesh_size", jax.device_count())
     worker_id = args.worker_id or f"worker-{os.getpid()}"
+    # the worker's telemetry rides in on the suite's ValidationConfig (set
+    # in main()); every hook below shares its registry and trace file
+    tel = getattr(suite.vcfg, "telemetry", None)
     queue = WorkQueue(ledger_path, worker_id, capabilities=caps,
                       lease_ttl=args.lease_ttl,
-                      max_abandons=args.max_abandons)
+                      max_abandons=args.max_abandons, telemetry=tel)
     worker = ValidatorWorker(
         args.ckpts_dir, suite,
         ledger=ValidationLedger(ledger_path,
-                                expected_tasks=suite.task_names),
-        queue=queue, logger=logger, worker_id=worker_id)
-    watcher = CheckpointWatcher(args.ckpts_dir)
+                                expected_tasks=suite.task_names,
+                                telemetry=tel),
+        queue=queue, logger=logger, worker_id=worker_id, telemetry=tel)
+    watcher = CheckpointWatcher(args.ckpts_dir, telemetry=tel)
     print(f"[asyncval] worker {worker_id} caps={caps} queue={ledger_path}",
           file=sys.stderr)
     done = 0
@@ -118,6 +144,7 @@ def _worker_main(args, suite, logger, ledger_path) -> int:
         pass
     print(f"[asyncval] worker {worker_id}: {done} units, "
           f"{len(worker.errors)} errors", file=sys.stderr)
+    _obs_finish(args, tel)
     return 0 if not worker.errors else 1
 
 
@@ -318,6 +345,18 @@ def main(argv=None) -> int:
     ap.add_argument("--serve_events", default=None,
                     help="replayable swap-event JSONL (default: "
                          "<logging_dir>/<run_name>_serve.jsonl)")
+    # -- checkpoint-lifecycle telemetry (repro.obs) --------------------------
+    ap.add_argument("--obs_trace", default=None,
+                    help="append lifecycle spans/events to this JSONL trace "
+                         "file (monotonic-clock; export to Chrome/Perfetto "
+                         "with python -m repro.obs.export)")
+    ap.add_argument("--obs_report", action="store_true",
+                    help="print the metrics-registry summary table at exit "
+                         "(checkpoint-to-verdict p50/p99, discovery lag, "
+                         "staging idle ratio, fleet/serve counters)")
+    ap.add_argument("--obs_metrics", default=None,
+                    help="dump the metrics-registry snapshot as JSON to "
+                         "this path at exit")
     ap.add_argument("--ensemble_top_k", type=int, default=0,
                     help="after validation ends, greedy-soup the top-k "
                          "checkpoints by the control metric into a virtual "
@@ -401,6 +440,16 @@ def main(argv=None) -> int:
     baseline_run = read_trec_run(args.run_file) if args.run_file else None
     sampler = SAMPLERS.get(chosen_sampler)(depth=args.depth)
 
+    # telemetry is observation only: with none of the --obs_* flags set
+    # every path below runs its legacy clock-free code byte-for-byte
+    tel = None
+    if args.obs_trace or args.obs_report or args.obs_metrics:
+        from repro.obs import Telemetry
+        tel = Telemetry(args.obs_trace,
+                        process=(args.worker_id or f"cli-{os.getpid()}")
+                        if args.worker else "cli",
+                        attrs={"run": args.run_name})
+
     mmap_dir = args.mmap_dir
     if args.token_backing == "mmap" and not mmap_dir:
         mmap_dir = os.path.join(args.output_dir, "token_cache")
@@ -418,7 +467,8 @@ def main(argv=None) -> int:
                             score_dtype=args.score_dtype,
                             write_run=args.write_run,
                             output_dir=args.output_dir,
-                            run_tag=args.run_name)
+                            run_tag=args.run_name,
+                            telemetry=tel)
     # the validator-facing object is a (single-task) ValidationSuite — the
     # CLI validates one task named "default", so its ledger rows, metric
     # names, and control specs are exactly the legacy pipeline's.
@@ -468,7 +518,8 @@ def main(argv=None) -> int:
                 os.remove(stop_path)
         control = ControlPlane(
             args.ckpts_dir, ccfg, stop_path=stop_path,
-            event_path=os.path.join(logdir, f"{args.run_name}_control.jsonl"))
+            event_path=os.path.join(logdir, f"{args.run_name}_control.jsonl"),
+            telemetry=tel)
 
     serve = None
     if args.serve:
@@ -489,10 +540,11 @@ def main(argv=None) -> int:
         serve_service = QueryService(
             spec, k=args.serve_k, max_batch=args.serve_batch,
             flush_ms=args.serve_flush_ms,
-            admission=AdmissionController(args.serve_pending))
+            admission=AdmissionController(args.serve_pending),
+            telemetry=tel)
         serve_promoter = Promoter(
             IndexBuilder(spec, corpus, scfg), serve_service,
-            args.ckpts_dir,
+            args.ckpts_dir, telemetry=tel,
             # in-process control plane: promote its live best pick; without
             # one, follow the latest committed checkpoint (promoter default)
             target_fn=((lambda: control.selector.best_step)
@@ -507,6 +559,7 @@ def main(argv=None) -> int:
         max_num_valid=args.max_num_valid,
         ledger_path=os.path.join(logdir, f"{args.run_name}_ledger.jsonl"),
         poll_interval_s=args.poll_interval,
+        telemetry=tel,
         # quality GC must never delete the checkpoint backing the live
         # (or mid-promotion) serving index
         extra_protect=serve[1].protect_set if serve is not None else None)
@@ -583,6 +636,7 @@ def main(argv=None) -> int:
                 print(f"[asyncval] ensemble step {vstep} "
                       f"(soup of {control.ensemble_members}): "
                       f"{getattr(res, 'log_metrics', res.metrics)}")
+    _obs_finish(args, tel)
     return 0 if not validator.errors else 1
 
 

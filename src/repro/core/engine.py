@@ -1053,7 +1053,7 @@ class StreamingEngine:
     def __init__(self, spec, doc_store: TokenStore, query_store: TokenStore,
                  stage: Stage, *, staging: str = "double_buffered",
                  staging_depth: int = 2, query_mesh=None,
-                 query_axis_names=None):
+                 query_axis_names=None, telemetry=None):
         if staging not in ("double_buffered", "sync"):
             raise ValueError(f"unknown staging {staging!r} "
                              "(expected 'double_buffered' or 'sync')")
@@ -1068,6 +1068,11 @@ class StreamingEngine:
         self.staging_depth = staging_depth
         self.query_mesh = query_mesh
         self.query_axis_names = query_axis_names
+        # nullable repro.obs.Telemetry: staged/encoded spans + per-chunk
+        # step-time and staging idle-gap metrics.  Observation only — the
+        # schedule, staging, and scoring math are identical with or without
+        # it (the timed next() below is the same next() zip() would issue).
+        self.telemetry = telemetry
 
     @property
     def score_dtype(self) -> str:
@@ -1076,12 +1081,16 @@ class StreamingEngine:
         return getattr(self.stage, "score_dtype", "f32")
 
     def run(self, params) -> Tuple[Run, Scores, Dict[str, float]]:
+        tel = self.telemetry
         t0 = time.time()
+        m0 = time.monotonic() if tel is not None else 0.0
         q_emb = encode_store(self.spec.encode_query, params, self.query_store,
                              mesh=self.query_mesh,
                              axis_names=self.query_axis_names)
         q_emb.block_until_ready()
         t_query = time.time() - t0
+        if tel is not None:
+            tel.record("encoded", m0, t_query, role="query")
 
         t0 = time.time()
         # a compacting rerank stage re-packed the candidate rows into its
@@ -1106,7 +1115,22 @@ class StreamingEngine:
             store, schedule,
             depth=1 if self.staging == "sync" else self.staging_depth,
             sharding=getattr(self.stage, "input_sharding", None))
-        for (ci, w), (toks, mask) in zip(schedule, batches):
+        # explicit next() instead of zip() so telemetry can time the
+        # staging wait (prefetch idle gap) separately from the fused step
+        # dispatch; the iteration order and count are identical to the old
+        # zip(schedule, batches) loop.
+        m_stream = time.monotonic() if tel is not None else 0.0
+        t_wait = 0.0
+        step_hist = tel.metrics.histogram("engine.chunk_step_s") \
+            if tel is not None else None
+        for ci, w in schedule:
+            if tel is None:
+                toks, mask = next(batches)
+            else:
+                m0 = time.monotonic()
+                toks, mask = next(batches)
+                t_wait += time.monotonic() - m0
+                m1 = time.monotonic()
             if w > 1:
                 bases = store.chunk * np.arange(ci, ci + w, dtype=np.int32)
                 n_valids = np.asarray([store.rows_valid(j) for j in
@@ -1117,8 +1141,20 @@ class StreamingEngine:
                 carry = self.stage.step(params, q_emb, carry, toks, mask,
                                         store.chunk * ci,
                                         store.rows_valid(ci))
+            if tel is not None:
+                step_hist.observe(time.monotonic() - m1)
         jax.block_until_ready(carry)
         t_stream = time.time() - t0
+        if tel is not None:
+            stream_total = max(time.monotonic() - m_stream, 1e-12)
+            idle_ratio = t_wait / stream_total
+            # aggregate staging-wait span for the run (duration = summed
+            # next() waits, not a contiguous interval — see obs.trace docs)
+            tel.record("staged", m_stream, t_wait, n_batches=len(schedule),
+                       staging=self.staging, idle_ratio=idle_ratio)
+            tel.metrics.histogram("engine.staging_wait_s").observe(t_wait)
+            tel.metrics.histogram("engine.staging_idle_ratio").observe(
+                idle_ratio)
 
         t0 = time.time()
         run, scores = self.stage.finalize(carry)
@@ -1145,7 +1181,8 @@ class MaterializedEngine:
                  query_ids: List[str], doc_ids: List[str],
                  per_query: Optional[Dict[str, List[str]]] = None, mesh=None,
                  rerank_block: Optional[int] = None,
-                 score_dtype: str = "f32"):
+                 score_dtype: str = "f32", telemetry=None):
+        self.telemetry = telemetry
         self.spec = spec
         self.doc_texts = doc_texts
         self.query_texts = query_texts
@@ -1163,7 +1200,9 @@ class MaterializedEngine:
         self.score_dtype = validate_score_dtype(score_dtype)
 
     def run(self, params) -> Tuple[Run, Scores, Dict[str, float]]:
+        tel = self.telemetry
         t0 = time.time()
+        m0 = time.monotonic() if tel is not None else 0.0
         c_emb, _ = encode_texts(self.spec.encode_passage, params,
                                 self.doc_texts, max_len=self.spec.p_max_len,
                                 batch_size=self.batch_size)
@@ -1175,11 +1214,16 @@ class MaterializedEngine:
             # beats resident shrink for the A/B baseline engine).
             c_emb = np.asarray(jnp.asarray(c_emb, jnp.bfloat16))
         t_corpus = time.time() - t0
+        if tel is not None:
+            tel.record("encoded", m0, t_corpus, role="corpus")
         t0 = time.time()
+        m0 = time.monotonic() if tel is not None else 0.0
         q_emb, _ = encode_texts(self.spec.encode_query, params,
                                 self.query_texts, max_len=self.spec.q_max_len,
                                 batch_size=self.batch_size)
         t_query = time.time() - t0
+        if tel is not None:
+            tel.record("encoded", m0, t_query, role="query")
 
         t0 = time.time()
         if self.mode in ("rerank", "average_rank") and self.per_query:
@@ -1257,15 +1301,22 @@ def make_streaming_engine(spec, store: ValidationStore, vcfg):
     """The default fused encode→top-k data path (see module docstring)."""
     mesh = vcfg.mesh
     chunk, q_chunk = chunk_geometry(vcfg, len(store.doc_texts), mesh)
+    tel = getattr(vcfg, "telemetry", None)
     doc_store = store.doc_store
     if doc_store is None:
         if vcfg.token_backing == "mmap" and not vcfg.mmap_dir:
             raise ValueError("token_backing='mmap' needs mmap_dir")
+        if tel is not None:
+            t0 = time.monotonic()
         doc_store = TokenStore.build(
             store.doc_texts, max_len=spec.p_max_len, chunk=chunk,
             backing=vcfg.token_backing,
             cache_dir=doc_cache_dir(vcfg.mmap_dir),
             fingerprint=vcfg.token_fingerprint)
+        if tel is not None:
+            tel.record("store_build", t0, time.monotonic() - t0,
+                       n_docs=len(store.doc_texts),
+                       backing=vcfg.token_backing)
     query_store = store.query_store
     if query_store is None:
         query_store = TokenStore.build(store.query_texts,
@@ -1279,7 +1330,8 @@ def make_streaming_engine(spec, store: ValidationStore, vcfg):
                        rerank_compact=getattr(vcfg, "rerank_compact", True))
     return StreamingEngine(spec, doc_store, query_store, stage,
                            staging=vcfg.staging,
-                           staging_depth=vcfg.staging_depth, query_mesh=mesh)
+                           staging_depth=vcfg.staging_depth, query_mesh=mesh,
+                           telemetry=tel)
 
 
 # declares that this factory consumes ValidationStore.doc_store when one is
@@ -1300,7 +1352,8 @@ def make_materialized_engine(spec, store: ValidationStore, vcfg):
                               per_query=store.per_query, mesh=vcfg.mesh,
                               rerank_block=vcfg.rerank_block,
                               score_dtype=getattr(vcfg, "score_dtype",
-                                                  "f32"))
+                                                  "f32"),
+                              telemetry=getattr(vcfg, "telemetry", None))
 
 
 def make_engine(spec, store: ValidationStore, vcfg):

@@ -38,6 +38,7 @@ as a deprecated shim over a one-task suite — bit-for-bit identical.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -49,6 +50,8 @@ from repro.core.engine import TokenStore
 from repro.core.registry import MODES, resolve_sampler
 from repro.core.samplers import SubsetResult
 from repro.models.biencoder import EncoderSpec
+
+_NULL_CM = contextlib.nullcontext()
 
 
 @dataclasses.dataclass
@@ -82,6 +85,13 @@ class ValidationConfig:
     write_run: bool = False
     output_dir: Optional[str] = None
     run_tag: str = "asyncval"
+    # nullable observability handle (repro.obs.Telemetry).  None (default)
+    # keeps every path span-free at the cost of one attribute check; set,
+    # it receives store_build/staged/encoded/scored lifecycle spans and
+    # engine metrics.  Excluded from comparisons so two configs differing
+    # only in instrumentation still compare equal.
+    telemetry: Any = dataclasses.field(default=None, compare=False,
+                                       repr=False)
 
 
 @dataclasses.dataclass
@@ -307,11 +317,15 @@ class ValidationSuite:
                 raise ValueError("token_backing='mmap' needs mmap_dir")
             index = self._store_order.setdefault(key, len(self._store_order))
             chunk, _ = chunk_geometry(tcfg, len(data.doc_texts), tcfg.mesh)
-            store = TokenStore.build(
-                data.doc_texts, max_len=self.spec.p_max_len, chunk=chunk,
-                backing=tcfg.token_backing,
-                cache_dir=doc_cache_dir(tcfg.mmap_dir, index),
-                fingerprint=tcfg.token_fingerprint)
+            with self.vcfg.telemetry.span(
+                    "store_build", task=task.name, n_docs=len(data.doc_texts),
+                    backing=tcfg.token_backing) \
+                    if self.vcfg.telemetry is not None else _NULL_CM:
+                store = TokenStore.build(
+                    data.doc_texts, max_len=self.spec.p_max_len, chunk=chunk,
+                    backing=tcfg.token_backing,
+                    cache_dir=doc_cache_dir(tcfg.mmap_dir, index),
+                    fingerprint=tcfg.token_fingerprint)
             self._stores[key] = store
             self.store_builds += 1
         return store
@@ -384,7 +398,17 @@ class ValidationSuite:
                              f"(tasks: {', '.join(self.tasks)})")
         step, task = int(getattr(unit, "step", 0)), self.tasks[name]
         eng = engine if engine is not None else self.engine(name)
-        run, scores, timings = eng.run(params)
+        tel = self.vcfg.telemetry
+        if tel is None:
+            run, scores, timings = eng.run(params)
+        else:
+            # exactly ONE scored span per (step, task) unit; the engine's
+            # staged/encoded spans nest under it via the tracer's
+            # thread-local parent stack
+            with tel.span("scored", step=step, task=name,
+                          engine=getattr(eng, "name", ""),
+                          score_dtype=getattr(eng, "score_dtype", "f32")):
+                run, scores, timings = eng.run(params)
         names = list(task.metrics)
         if task.mode == "average_rank" and "AverageRank" not in names:
             names.append("AverageRank")

@@ -12,11 +12,13 @@ protection (a checkpoint is deletable only once validated).
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import os
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, \
+    Tuple
 
 from repro.ckpt import checkpoint as ckpt
 from repro.core.jsonl import append_jsonl_atomic, read_jsonl_tolerant
@@ -25,6 +27,58 @@ from repro.core.suite import (SuiteResult, ValidationResult,
                               params_from_checkpoint)
 from repro.core.watcher import CheckpointWatcher, Policy
 from repro.core.workqueue import WorkQueue, WorkUnit
+
+CKPT_TO_VERDICT_METRIC = "validate.ckpt_to_verdict_s"
+
+
+class ErrorRing:
+    """Bounded fault list — a drop-in for the validator's ``errors``.
+
+    A long-running fleet worker that keeps hitting a poisoned unit would
+    grow an unbounded ``List[tuple]``; this ring keeps the newest
+    ``maxlen`` faults and counts the overflow in ``dropped`` (mirrored to
+    the ``validator.errors_dropped`` counter when telemetry is bound).
+    Supports the list surface existing callers use: ``append``, ``len``,
+    iteration, indexing, and truthiness."""
+
+    def __init__(self, maxlen: int = 256):
+        self.maxlen = int(maxlen)
+        self.dropped = 0
+        self._ring: collections.deque = collections.deque(maxlen=self.maxlen)
+        self._counter = None            # repro.obs.metrics.Counter, if bound
+
+    def bind_counter(self, counter) -> None:
+        if self.dropped and counter is not None:
+            counter.inc(self.dropped)   # count drops from before binding
+        self._counter = counter
+
+    def append(self, item) -> None:
+        if len(self._ring) == self.maxlen:
+            self.dropped += 1
+            if self._counter is not None:
+                self._counter.inc()
+        self._ring.append(item)
+
+    def clear(self) -> None:
+        self._ring.clear()
+
+    def __len__(self) -> int:
+        return len(self._ring)
+
+    def __iter__(self) -> Iterator:
+        return iter(list(self._ring))
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return list(self._ring)[i]
+        return self._ring[i]
+
+    def __bool__(self) -> bool:
+        return bool(self._ring)
+
+    def __repr__(self) -> str:
+        return (f"ErrorRing({list(self._ring)!r}, maxlen={self.maxlen}, "
+                f"dropped={self.dropped})")
 
 
 class ValidationLedger:
@@ -64,10 +118,14 @@ class ValidationLedger:
     :meth:`rows` hands out a snapshot instead of live dicts."""
 
     def __init__(self, path: Optional[str],
-                 expected_tasks: Optional[Sequence[str]] = None):
+                 expected_tasks: Optional[Sequence[str]] = None,
+                 telemetry=None):
         self.path = path
         self.expected_tasks: Optional[Tuple[str, ...]] = \
             tuple(expected_tasks) if expected_tasks is not None else None
+        # observation only: a `recorded` span around each fsync'd append.
+        # The ledger's bytes are identical with telemetry on or off.
+        self.telemetry = telemetry
         self._lock = threading.Lock()
         self._rows: List[dict] = []                    # record order
         self._index: Dict[Tuple[int, str], int] = {}   # (step, task) -> row
@@ -165,6 +223,7 @@ class ValidationLedger:
             if wid:
                 rec["worker_id"] = wid
             recs.append(rec)
+        tel = self.telemetry
         with self._lock:
             for rec in recs:
                 self._ingest(rec)
@@ -173,7 +232,12 @@ class ValidationLedger:
                 # file, and append_jsonl_atomic also performs the writer-side
                 # torn-tail repair the explicit truncate used to do
                 self._torn_offset = None
-                append_jsonl_atomic(self.path, recs)
+                if tel is None:
+                    append_jsonl_atomic(self.path, recs)
+                else:
+                    with tel.span("recorded", step=recs[0]["step"],
+                                  task=recs[0]["task"], n_rows=len(recs)):
+                        append_jsonl_atomic(self.path, recs)
 
 
 class ValidatorWorker:
@@ -205,7 +269,9 @@ class ValidatorWorker:
                  shardings: Any = None,
                  engine: Any = None,
                  worker_id: str = "",
-                 heartbeat_interval_s: float = 0.25):
+                 heartbeat_interval_s: float = 0.25,
+                 telemetry=None,
+                 max_errors: int = 256):
         self.ckpt_root = ckpt_root
         self.pipeline = pipeline
         self.queue = queue
@@ -220,8 +286,15 @@ class ValidatorWorker:
         expected = tuple(getattr(pipeline, "task_names", ())
                          or ("default",))
         self.ledger = ledger if ledger is not None \
-            else ValidationLedger(None, expected_tasks=expected)
-        self.errors: List[tuple] = []
+            else ValidationLedger(None, expected_tasks=expected,
+                                  telemetry=telemetry)
+        self.telemetry = telemetry
+        self.errors = ErrorRing(max_errors)
+        if telemetry is not None:
+            self.errors.bind_counter(
+                telemetry.metrics.counter("validator.errors_dropped"))
+            if self.ledger.telemetry is None:
+                self.ledger.telemetry = telemetry
         self.completed: List[WorkUnit] = []
         # last restored checkpoint, so the N units of one step (and the
         # whole-step path) pay the restore cost once
@@ -270,7 +343,25 @@ class ValidatorWorker:
         result = self._stamp(self.pipeline.validate_params(
             params, step=step, engine=self.engine))
         self.ledger.record(result)
+        if self.telemetry is not None:
+            self._observe_verdict(step)
         return result
+
+    def _observe_verdict(self, step: int) -> None:
+        """Checkpoint-to-verdict latency: discovery mark → ledger row when
+        the watcher ran in this process, else COMMIT-marker mtime → now
+        (wall clock; covers commit→verdict for cross-process fleets).
+        Metrics only — never a scheduling input."""
+        tel = self.telemetry
+        lag = tel.since("discovered", step)
+        if lag is None:
+            marker = os.path.join(ckpt._step_dir(self.ckpt_root, step),
+                                  ckpt.COMMIT_MARKER)
+            try:
+                lag = max(0.0, time.time() - os.path.getmtime(marker))
+            except OSError:
+                return
+        tel.metrics.histogram(CKPT_TO_VERDICT_METRIC).observe(lag)
 
     # -- fleet claim loop ---------------------------------------------------
     def execute_unit(self, unit: WorkUnit) -> ValidationResult:
@@ -289,6 +380,8 @@ class ValidatorWorker:
             hb.join()
         self.ledger.record(result)
         self.queue.complete(unit)   # after the row: a complete has a result
+        if self.telemetry is not None:
+            self._observe_verdict(unit.step)
         self.log_result(result)
         self.completed.append(unit)
         return result
@@ -364,31 +457,45 @@ class AsyncValidator:
                  controller: Any = None,
                  workqueue: Optional[WorkQueue] = None,
                  worker_id: str = "",
-                 extra_protect: Optional[Callable[[], set]] = None):
+                 extra_protect: Optional[Callable[[], set]] = None,
+                 telemetry=None):
         self.ckpt_root = ckpt_root
-        self.watcher = CheckpointWatcher(ckpt_root, policy=policy)
+        self.telemetry = telemetry
+        self.watcher = CheckpointWatcher(ckpt_root, policy=policy,
+                                         telemetry=telemetry)
         self.max_num_valid = max_num_valid
         # completion = a row for every suite task (single-task pipelines and
         # doubles fall back to the one "default" task = v1 semantics)
         expected = tuple(getattr(pipeline, "task_names", ()) or ("default",))
         self.workqueue = workqueue
+        if telemetry is not None:
+            # single-attachment convenience: thread the handle through the
+            # suite config (engine spans) and queue if the caller didn't
+            if workqueue is not None and workqueue.telemetry is None:
+                workqueue.telemetry = telemetry
+            vcfg = getattr(pipeline, "vcfg", None)
+            if vcfg is not None \
+                    and getattr(vcfg, "telemetry", None) is None:
+                vcfg.telemetry = telemetry
         # engine injection (the `engine` kwarg): swap the validation data
         # path (streaming / materialized / custom) for THIS validator's runs
         # without rebuilding — or mutating — the pipeline's subset, stores,
         # or metric plumbing.
         self.worker = ValidatorWorker(
             ckpt_root, pipeline,
-            ledger=ValidationLedger(ledger_path, expected_tasks=expected),
+            ledger=ValidationLedger(ledger_path, expected_tasks=expected,
+                                    telemetry=telemetry),
             queue=workqueue, logger=logger,
             params_extractor=params_extractor, shardings=shardings,
-            engine=engine, worker_id=worker_id)
+            engine=engine, worker_id=worker_id, telemetry=telemetry)
         self.poll_interval_s = poll_interval_s
         self.results: List[ValidationResult] = []
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
-        # one shared fault list: worker execution faults and loop-level
-        # faults (retry exhaustion, controller bugs) land together
-        self.errors: List[tuple] = self.worker.errors
+        # one shared fault ring (bounded; see ErrorRing): worker execution
+        # faults and loop-level faults (retry exhaustion, controller bugs)
+        # land together
+        self.errors = self.worker.errors
         # failed-step retry budget: a checkpoint that fails validation is
         # requeued (the watcher marked it seen when poll() handed it out, so
         # without this it would be permanently swallowed); after max_retries

@@ -23,6 +23,14 @@ import time
 from typing import List, Optional, Set
 
 from repro.ckpt import checkpoint as ckpt
+from repro.obs.metrics import MetricsRegistry
+
+#: shared-registry instrument names (see repro.obs): the validator feeds
+#: the latency EMA, the watcher feeds the cadence EMA, BudgetPolicy reads
+#: both — one source of timing truth instead of private policy state.
+VALIDATION_LATENCY_METRIC = "validate.latency_s"
+CHECKPOINT_CADENCE_METRIC = "watcher.checkpoint_cadence_s"
+DISCOVERY_LAG_METRIC = "watcher.discovery_lag_s"
 
 
 @dataclasses.dataclass
@@ -67,6 +75,14 @@ class BudgetPolicy(Policy):
     Selection takes every ``stride``-th pending step counted **from the
     newest**, so the newest checkpoint is always validated — staleness stays
     bounded by one validation, whatever the stride.
+
+    The latency/cadence estimates live as named :class:`~repro.obs.metrics.
+    Ewma` instruments in a metrics registry rather than private floats:
+    ``observe_latency``/``observe_cadence`` remain the feed API (same EMA
+    update, bit for bit), but :meth:`bind_metrics` can re-home both onto a
+    shared :class:`~repro.obs.MetricsRegistry` so the policy reads the same
+    ``validate.latency_s`` / ``watcher.checkpoint_cadence_s`` estimates
+    that ``--obs_report`` prints — one source of timing truth.
     """
 
     kind: str = "budget"
@@ -77,18 +93,34 @@ class BudgetPolicy(Policy):
 
     def __post_init__(self):
         self._stride_f = float(max(self.min_stride, 1))
-        self._latency_ema: Optional[float] = None
-        self._cadence_ema: Optional[float] = None
+        # private registry until bind_metrics() re-homes the instruments
+        self.bind_metrics(MetricsRegistry())
+
+    def bind_metrics(self, registry: MetricsRegistry) -> None:
+        """Back the latency/cadence EMAs with ``registry``'s instruments,
+        carrying any current estimate over so rebinding mid-run never
+        forgets what the policy has learned."""
+        lat = registry.ewma(VALIDATION_LATENCY_METRIC, smooth=self.smooth)
+        cad = registry.ewma(CHECKPOINT_CADENCE_METRIC, smooth=self.smooth)
+        # the policy owns these instruments' smoothing, even when rebinding
+        # onto a registry where another party created them first
+        lat.smooth = cad.smooth = self.smooth
+        prev_lat = getattr(self, "_latency", None)
+        prev_cad = getattr(self, "_cadence", None)
+        if prev_lat is not None and prev_lat.value is not None \
+                and lat.value is None:
+            lat.value, lat.count = prev_lat.value, prev_lat.count
+        if prev_cad is not None and prev_cad.value is not None \
+                and cad.value is None:
+            cad.value, cad.count = prev_cad.value, prev_cad.count
+        self._latency = lat
+        self._cadence = cad
 
     def observe_latency(self, seconds: float) -> None:
-        prev = self._latency_ema
-        self._latency_ema = seconds if prev is None else \
-            self.smooth * prev + (1 - self.smooth) * seconds
+        self._latency.update(seconds)
 
     def observe_cadence(self, seconds: float) -> None:
-        prev = self._cadence_ema
-        self._cadence_ema = seconds if prev is None else \
-            self.smooth * prev + (1 - self.smooth) * seconds
+        self._cadence.update(seconds)
 
     @property
     def effective_stride(self) -> int:
@@ -102,10 +134,9 @@ class BudgetPolicy(Policy):
             self._stride_f = min(float(self.max_stride), self._stride_f * 2.0)
         elif depth <= self.target_depth:
             self._stride_f = max(float(self.min_stride), self._stride_f / 2.0)
-        if self._latency_ema is not None and self._cadence_ema is not None \
-                and self._cadence_ema > 0:
-            floor = min(float(self.max_stride),
-                        self._latency_ema / self._cadence_ema)
+        latency, cadence = self._latency.value, self._cadence.value
+        if latency is not None and cadence is not None and cadence > 0:
+            floor = min(float(self.max_stride), latency / cadence)
             self._stride_f = max(self._stride_f, floor)
         k = self.effective_stride
         newest_first = sorted(pending, reverse=True)
@@ -114,9 +145,16 @@ class BudgetPolicy(Policy):
 
 class CheckpointWatcher:
     def __init__(self, root: str, *, policy: Optional[Policy] = None,
-                 skip_existing: bool = False):
+                 skip_existing: bool = False, telemetry=None):
         self.root = root
         self.policy = policy or Policy()
+        # telemetry observes discovery (spans + discovery-lag histogram);
+        # it never influences which steps poll() returns.  Budget policies
+        # re-home their EMAs onto the shared registry here so the same
+        # numbers drive scheduling and --obs_report.
+        self.telemetry = telemetry
+        if telemetry is not None and hasattr(self.policy, "bind_metrics"):
+            self.policy.bind_metrics(telemetry.metrics)
         self._seen: Set[int] = set()
         # steps a policy deliberately passed over (stale under latest_first,
         # off-stride, over-budget): they will never be validated, carry no
@@ -170,6 +208,9 @@ class CheckpointWatcher:
                 self.policy.observe_cadence(
                     (now - self._last_arrival_t) / len(steps))
             self._last_arrival_t = now
+            tel = self.telemetry
+            if tel is not None:
+                self._observe_discovery(tel, steps)
         chosen = self.policy.select(steps)
         # every discovered step is consumed by this poll: chosen ones are
         # handed out, the rest are policy-skipped (stale under latest_first,
@@ -178,6 +219,25 @@ class CheckpointWatcher:
         self._seen.update(steps)
         self._skipped.update(set(steps) - set(chosen))
         return chosen
+
+    def _observe_discovery(self, tel, steps: List[int]) -> None:
+        """Emit one ``discovered`` event per new step, measure discovery
+        lag (COMMIT-marker mtime → now, wall clock — metrics only, never a
+        decision input), and mark discovery for the checkpoint-to-verdict
+        latency measured when the verdict is recorded."""
+        lag_hist = tel.metrics.histogram(DISCOVERY_LAG_METRIC)
+        for step in steps:
+            lag = None
+            marker = os.path.join(ckpt._step_dir(self.root, step),
+                                  ckpt.COMMIT_MARKER)
+            try:
+                lag = max(0.0, time.time() - os.path.getmtime(marker))
+            except OSError:
+                pass
+            if lag is not None:
+                lag_hist.observe(lag)
+            tel.mark("discovered", step)
+            tel.event("discovered", step=step, lag_s=lag)
 
     @property
     def skipped(self) -> Set[int]:

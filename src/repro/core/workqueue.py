@@ -283,7 +283,8 @@ class WorkQueue:
 
     def __init__(self, path: str, worker_id: str = "worker-0", *,
                  capabilities: Optional[Mapping[str, Any]] = None,
-                 lease_ttl: int = 16, max_abandons: int = 2):
+                 lease_ttl: int = 16, max_abandons: int = 2,
+                 telemetry=None):
         self.path = path
         self.worker_id = str(worker_id)
         self.capabilities = dict(capabilities or {})
@@ -292,6 +293,14 @@ class WorkQueue:
         self._offset = 0            # first unconsumed byte of the file
         self.state = QueueState(lease_ttl=lease_ttl,
                                 max_abandons=max_abandons)
+        # telemetry mirrors the fold's decision events into fleet.* counters
+        # (publish/claim/claim_lost/reclaim/complete/abandon, as observed by
+        # THIS handle's fold) and emits published/claimed lifecycle events.
+        # It reads the decision trace; it never feeds it — replay() stays
+        # byte-identical with telemetry on or off.
+        self.telemetry = telemetry
+        self._events_counted = 0    # fold-events watermark for the mirrors
+        self._rows_counted = 0      # result-rows watermark (completions)
 
     # -- reading -------------------------------------------------------------
     def refresh(self) -> QueueState:
@@ -300,12 +309,14 @@ class WorkQueue:
             size = os.path.getsize(self.path)
         except OSError:
             return self.state
+        rebuilt = False
         if size < self._offset:
             # the file shrank: a restarting appender repaired a torn tail
             # below our read offset — refold from scratch
             self._offset = 0
             self.state = QueueState(lease_ttl=self.lease_ttl,
                                     max_abandons=self.max_abandons)
+            rebuilt = True
         if size == self._offset:
             return self.state
         with open(self.path, "rb") as f:
@@ -329,6 +340,26 @@ class WorkQueue:
                 # every reader skips it identically, so determinism holds
                 continue
             self.state.fold(rec)
+        tel = self.telemetry
+        if tel is not None:
+            events = self.state.events
+            rows = self.state.result_rows
+            if rebuilt:
+                # the refold replayed history this handle already mirrored;
+                # resync the watermarks instead of double-counting
+                self._events_counted = len(events)
+                self._rows_counted = len(rows)
+            else:
+                for ev in events[self._events_counted:]:
+                    tel.metrics.counter(f"fleet.{ev['event']}").inc()
+                self._events_counted = len(events)
+                # in the repo flow the verdict ROW marks a unit DONE (the
+                # explicit complete record then folds as a no-op, emitting
+                # no event), so rows are the global completion count
+                fresh_rows = len(rows) - self._rows_counted
+                if fresh_rows:
+                    tel.metrics.counter("fleet.complete").inc(fresh_rows)
+                self._rows_counted = len(rows)
         return self.state
 
     # -- appending -----------------------------------------------------------
@@ -345,6 +376,10 @@ class WorkQueue:
             self._append([{"kind": "unit", "step": u.step, "task": u.task,
                            "requires": u.requires_dict} for u in fresh])
             self.refresh()
+            tel = self.telemetry
+            if tel is not None:
+                for u in fresh:
+                    tel.event("published", step=u.step, task=u.task)
         return fresh
 
     def try_claim(self, unit: WorkUnit) -> bool:
@@ -355,14 +390,21 @@ class WorkQueue:
         self._append([{"kind": "claim", "step": unit.step, "task": unit.task,
                        "worker": self.worker_id}])
         st = self.refresh().get(unit.step, unit.task)
-        return st is not None and st.status == CLAIMED \
+        won = st is not None and st.status == CLAIMED \
             and st.holder == self.worker_id
+        tel = self.telemetry
+        if tel is not None and won:
+            tel.event("claimed", step=unit.step, task=unit.task)
+        return won
 
     def renew(self, unit: WorkUnit) -> None:
         """Heartbeat: re-stamp our lease so it cannot expire while the
         engine run is still in flight."""
         self._append([{"kind": "renew", "step": unit.step, "task": unit.task,
                        "worker": self.worker_id}])
+        tel = self.telemetry
+        if tel is not None:
+            tel.metrics.counter("fleet.renew").inc()
 
     def complete(self, unit: WorkUnit) -> None:
         self._append([{"kind": "complete", "step": unit.step,

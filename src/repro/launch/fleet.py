@@ -125,17 +125,23 @@ class FleetSupervisor:
                  plan_units: Optional[Callable[[int],
                                                List[WorkUnit]]] = None,
                  lease_ttl: int = 16, max_abandons: int = 2,
-                 extra_protect: Optional[Callable[[], set]] = None):
+                 extra_protect: Optional[Callable[[], set]] = None,
+                 telemetry=None):
         self.ckpt_root = ckpt_root
         # GC protections beyond fleet state — e.g. the serving tier's
         # Promoter.protect_set (live + mid-promotion checkpoint steps)
         self.extra_protect = extra_protect
         self.expected_tasks = tuple(expected_tasks) or ("default",)
         self.control = control
+        # observation only: discovery lag + published/discovered lifecycle
+        # events and the fold's fleet.* counter mirrors (see repro.obs)
+        self.telemetry = telemetry
         self.queue = WorkQueue(ledger_path, "supervisor",
                                lease_ttl=lease_ttl,
-                               max_abandons=max_abandons)
-        self.watcher = CheckpointWatcher(ckpt_root, policy=policy)
+                               max_abandons=max_abandons,
+                               telemetry=telemetry)
+        self.watcher = CheckpointWatcher(ckpt_root, policy=policy,
+                                         telemetry=telemetry)
         self.plan_units = plan_units or (lambda step: [
             WorkUnit.make(step, t) for t in self.expected_tasks])
         self.pool = LocalWorkerPool()

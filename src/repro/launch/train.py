@@ -200,7 +200,7 @@ def run(args) -> dict:
         "mode": "sync" if args.sync else "async",
         "validated_steps": validator.ledger.validated_steps,
         "metrics": {r.step: r.log_metrics for r in validator.results},
-        "errors": validator.errors,
+        "errors": list(validator.errors),
         "stopped_early": trainer.stopped_early,
         "stop_verdict": trainer.stop_verdict,
         "best_step": control.selector.best_step if control else None,

@@ -31,11 +31,23 @@ class AdmissionController:
         self.peak = 0
         self.admitted = 0
         self.rejected = 0
+        self._reject_counter = None     # repro.obs Counter, when bound
+
+    def bind_metrics(self, registry) -> None:
+        """Mirror rejections into ``serve.admission_rejects`` on a shared
+        :class:`repro.obs.MetricsRegistry` (counting any pre-bind ones)."""
+        counter = registry.counter("serve.admission_rejects")
+        with self._lock:
+            if self.rejected:
+                counter.inc(self.rejected)
+            self._reject_counter = counter
 
     def try_acquire(self) -> bool:
         with self._lock:
             if self.pending >= self.max_pending:
                 self.rejected += 1
+                if self._reject_counter is not None:
+                    self._reject_counter.inc()
                 return False
             self.pending += 1
             self.admitted += 1

@@ -55,7 +55,12 @@ class Promoter:
                  params_extractor: Callable = params_from_checkpoint,
                  shardings: Any = None,
                  poll_interval_s: float = 0.2,
-                 build_hook: Optional[Callable[[int], None]] = None):
+                 build_hook: Optional[Callable[[int], None]] = None,
+                 telemetry=None):
+        # observation only: a `promoted` span per successful swap (restore →
+        # build → verify → flip) and a serve.promote_s histogram; swap
+        # decisions and the event log are identical with telemetry off
+        self.telemetry = telemetry
         self.builder = builder
         self.service = service
         self.ckpt_root = ckpt_root
@@ -143,6 +148,8 @@ class Promoter:
         if want not in ckpt.list_steps(self.ckpt_root):
             return False                 # selected but not yet durable
         self._promoting = want
+        tel = self.telemetry
+        m0 = time.monotonic() if tel is not None else 0.0
         try:
             state, _ = ckpt.restore(self.ckpt_root, want,
                                     shardings=self.shardings)
@@ -159,6 +166,13 @@ class Promoter:
                           impl=index.impl, n_docs=index.n_docs,
                           build_s=round(index.build_s, 6))
             self.swaps.append((prev, want))
+            if tel is not None:
+                dur = time.monotonic() - m0
+                tel.record("promoted", m0, dur, step=want,
+                           prev=prev if prev is not None else -1,
+                           n_docs=index.n_docs,
+                           build_s=round(index.build_s, 6))
+                tel.metrics.histogram("serve.promote_s").observe(dur)
             return True
         except BaseException as e:       # noqa: BLE001 — old index serves on
             self.failures.append((want, e))

@@ -65,7 +65,8 @@ class QueryService:
 
     def __init__(self, spec, *, k: int = 10, max_batch: int = 8,
                  flush_ms: float = 4.0,
-                 admission: Optional[AdmissionController] = None):
+                 admission: Optional[AdmissionController] = None,
+                 telemetry=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.spec = spec
@@ -73,6 +74,11 @@ class QueryService:
         self.max_batch = int(max_batch)
         self.flush_s = float(flush_ms) / 1000.0
         self.admission = admission
+        # observation only: `served` spans per micro-batch plus occupancy /
+        # flush-window histograms; batching and scoring are unchanged
+        self.telemetry = telemetry
+        if telemetry is not None and admission is not None:
+            admission.bind_metrics(telemetry.metrics)
         self._encode = jitted_encoder(spec.encode_query)
         self._cv = threading.Condition()
         self._queue: collections.deque = collections.deque()
@@ -188,6 +194,8 @@ class QueryService:
                 r.event.set()
             return
         try:
+            tel = self.telemetry
+            m0 = time.monotonic() if tel is not None else 0.0
             ids, scores = self._score(index, [r.tokens for r in reqs])
             now = time.time()
             for r, d, s in zip(reqs, ids, scores):
@@ -196,6 +204,20 @@ class QueryService:
                                            latency_s=now - r.t0)
             self.served += len(reqs)
             self.batches += 1
+            if tel is not None:
+                occupancy = len(reqs) / self.max_batch
+                # flush-window utilization: how much of the max-latency
+                # budget the oldest request actually waited (>1 = dispatch
+                # overran the window, e.g. a slow prior batch)
+                wait = now - min(r.t0 for r in reqs)
+                flush_util = wait / self.flush_s if self.flush_s > 0 else 0.0
+                tel.record("served", m0, time.monotonic() - m0,
+                           step=index.step, n=len(reqs),
+                           occupancy=occupancy)
+                tel.metrics.histogram("serve.batch_occupancy").observe(
+                    occupancy)
+                tel.metrics.histogram("serve.flush_window_util").observe(
+                    flush_util)
         except BaseException as e:     # noqa: BLE001 — fail the batch, not
             for r in reqs:             # the serving loop
                 r.error = e

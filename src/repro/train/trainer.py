@@ -84,12 +84,16 @@ class Trainer:
     def __init__(self, cfg: TrainerConfig, loss_fn: Callable,
                  optimizer: Optimizer, init_params: Any,
                  batch_iter: Callable[[int], Any],
-                 logger: Optional[Any] = None):
+                 logger: Optional[Any] = None,
+                 telemetry=None):
         self.cfg = cfg
         self.loss_fn = loss_fn
         self.optimizer = optimizer
         self.batch_iter = batch_iter          # step -> batch (deterministic)
         self.logger = logger
+        # observation only: a `produced` lifecycle event per saved
+        # checkpoint (the first edge of the checkpoint-to-verdict latency)
+        self.telemetry = telemetry
         self.saver = ckpt.AsyncSaver()
         self._step_fn = jax.jit(make_train_step(loss_fn, optimizer,
                                                 cfg.grad_accum))
@@ -122,6 +126,12 @@ class Trainer:
         else:
             ckpt.save(self.cfg.ckpt_dir, self.step, state, extra)
         self._last_saved_step = self.step
+        tel = self.telemetry
+        if tel is not None:
+            # async saves commit later; the event marks hand-off to the
+            # save path, the COMMIT-marker mtime remains the durable edge
+            tel.event("produced", step=self.step,
+                      async_save=self.cfg.async_save)
 
     def _stop_requested(self) -> bool:
         """Poll the control plane's STOP marker (async early stopping)."""
