@@ -5,10 +5,10 @@
 Prints CSV rows (``name,...``) per benchmark; asserts each benchmark's
 paper-claim invariants (see individual modules).  Each benchmark's
 ``main()`` return value (rows of dicts, or None) is collected into a
-machine-readable JSON report — ``BENCH_9.json`` next to this file by
+machine-readable JSON report — ``BENCH_10.json`` next to this file by
 default — whose headline is the checkpoint-to-verdict p50/p99 from
-``bench_async_schedule``'s telemetry, so the staleness trajectory is
-tracked across PRs.  The dry-run/roofline tables are produced separately
+``bench_async_schedule``'s telemetry (watcher and lazy hand-off routes),
+so the staleness trajectory is tracked across PRs.  The dry-run/roofline tables are produced separately
 by ``repro.launch.dryrun`` (they need the 512-device environment).
 """
 
@@ -25,16 +25,23 @@ BENCHES = ("async_schedule", "fidelity", "validation_time",
            "streaming_engine", "mips_kernel")
 
 DEFAULT_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                            "BENCH_9.json")
+                            "BENCH_10.json")
 
 
 def _headline(results):
     """Pull the cross-PR tracked numbers out of the per-bench rows."""
     head = {}
     for row in results.get("async_schedule") or []:
-        if isinstance(row, dict) and "ckpt_to_verdict_p50_s" in row:
+        if not isinstance(row, dict) or "ckpt_to_verdict_p50_s" not in row:
+            continue
+        if row.get("mode") == "async":
             head["ckpt_to_verdict_p50_s"] = row["ckpt_to_verdict_p50_s"]
             head["ckpt_to_verdict_p99_s"] = row["ckpt_to_verdict_p99_s"]
+        elif row.get("mode") == "handoff":
+            # the lazy hand-off (PR 10) staleness number: commit-to-verdict
+            # with the snapshot route on — tracked next to the watcher path
+            head["handoff_ckpt_to_verdict_p50_s"] = \
+                row["ckpt_to_verdict_p50_s"]
     return head
 
 

@@ -18,6 +18,14 @@ claimable (step, task) work queue — run N copies of
 ``examples/fleet_validation.py`` for the full walkthrough: 1 trainer +
 2 capability-tagged workers + control plane, with crash-safe lease
 reclaim and byte-identical offline replay of every fleet decision.
+
+Lazy hand-off: pass ``--handoff`` to ``python -m repro.launch.train`` to
+validate each checkpoint from a host-resident snapshot the moment the
+device->host copy lands — before the durable save commits — with
+bit-identical verdicts (add ``--handoff-spool DIR`` to share snapshots
+with ``repro.core.cli --handoff_spool DIR`` validator processes); see
+``examples/lazy_handoff.py`` for the measured snapshot-vs-durable
+verdict latency gap.
 """
 
 import os

@@ -98,26 +98,72 @@ def save(root: str, step: int, tree: Any, extra: Optional[dict] = None) -> str:
 
 
 class AsyncSaver:
-    """Background checkpoint writer — training never blocks on I/O.
+    """Background checkpoint writer — training never blocks on I/O *or* on
+    the device→host transfer.
 
     One in-flight save at a time (the trainer waits only if it outruns disk,
-    matching orbax semantics)."""
+    matching orbax semantics).  The calling thread only *issues* the
+    device→host copies (``copy_to_host_async`` per leaf — a DMA enqueue,
+    not a wait); the background thread materializes the numpy arrays once
+    the copies land.  Safe because jax arrays are immutable: the trainer
+    rebinds its state to new arrays each step, so the captured leaves can
+    never change underneath the transfer (donated buffers excepted — the
+    trainer's step does not donate).
+
+    Hand-off hooks (all optional, all invoked on the background thread):
+    ``on_host_copy(step, host_tree)`` fires the moment the host copy is
+    materialized — BEFORE durable serialization, which is the lazy
+    snapshot hand-off's publish point; ``on_durable(step)`` after the
+    two-phase commit lands; ``on_failure(step, exc)`` if the durable save
+    raises (the error is still surfaced on the next :meth:`wait`)."""
 
     def __init__(self):
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
 
     def save(self, root: str, step: int, tree: Any,
-             extra: Optional[dict] = None) -> None:
+             extra: Optional[dict] = None, *,
+             on_host_copy: Optional[Any] = None,
+             on_durable: Optional[Any] = None,
+             on_failure: Optional[Any] = None) -> None:
         self.wait()
-        # snapshot to host memory synchronously so the trainer may mutate
-        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+
+        # issue every leaf's device->host DMA now, without waiting for any
+        # of them — np.asarray below then finds the host value already (or
+        # soon) resident instead of serializing transfer behind transfer
+        def _start_copy(x):
+            start = getattr(x, "copy_to_host_async", None)
+            if start is not None:
+                start()
+            return x
+
+        pending = jax.tree_util.tree_map(_start_copy, tree)
 
         def _run():
             try:
+                host_tree = jax.tree_util.tree_map(
+                    lambda x: np.asarray(x), pending)
+                if on_host_copy is not None:
+                    try:
+                        on_host_copy(step, host_tree)
+                    except BaseException as e:
+                        # the hand-off publish is an optimization; its
+                        # failure must never cost the durable checkpoint
+                        self._error = e
                 save(root, step, host_tree, extra)
             except BaseException as e:   # surfaced on next wait()
                 self._error = e
+                if on_failure is not None:
+                    try:
+                        on_failure(step, e)
+                    except BaseException:
+                        pass             # the save error takes precedence
+                return
+            if on_durable is not None:
+                try:
+                    on_durable(step)
+                except BaseException as e:
+                    self._error = e
 
         self._thread = threading.Thread(target=_run, daemon=True)
         self._thread.start()

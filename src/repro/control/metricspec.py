@@ -180,6 +180,11 @@ def flatten_rows(rows, expected_tasks=None, with_context=False,
                 # without it keep emitting byte-identical events
                 ctx["worker_id"] = join({str(r.get("worker_id", ""))
                                          for r in raws})
+            if any("handoff" in r for r in raws):
+                # hand-off provenance: ledgered only on snapshot-scored
+                # rows, so pre-handoff ledgers replay byte-identically
+                ctx["handoff"] = join({str(r.get("handoff", "durable"))
+                                       for r in raws})
         result.append((step, flat, ctx))
     return result
 

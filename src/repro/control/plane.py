@@ -63,9 +63,22 @@ class ControlPlane:
     def __init__(self, ckpt_root: Optional[str], cfg: ControlConfig, *,
                  stop_path: Optional[str] = None,
                  event_path: Optional[str] = None,
-                 telemetry=None):
+                 telemetry=None,
+                 durability: Optional[Callable[[int], str]] = None):
         self.ckpt_root = ckpt_root
         self.cfg = cfg
+        # lazy hand-off durability gate: ``durability(step)`` reports
+        # "pending" | "durable" | "failed" (SnapshotChannel.durability is
+        # the canonical source; default falls back to the COMMIT marker).
+        # DECISIONS (selection, early stop) act on snapshot-scored rows
+        # immediately — they are reversible observations; ACTUATIONS that
+        # destroy state (quality GC here; soup/promotion already require a
+        # committed checkpoint to read) are deferred while any observed
+        # snapshot-scored step is still pending.  Actuations are excluded
+        # from events.decisions(), so deferral never breaks replay parity.
+        self.durability = durability
+        self._gc_hold: set = set()
+        self._gc_validator: Any = None
         # observation only (decision latency, `selected` lifecycle events);
         # the decision path itself stays clock-free so replay_ledger — which
         # constructs planes without telemetry — re-derives identical events.
@@ -187,11 +200,57 @@ class ControlPlane:
             # fleet attribution, keyed only when present — exactly like the
             # ledger rows, so replay re-derives the same event payloads
             context["worker_id"] = wid
+        hand = str(getattr(result, "handoff", "") or "")
+        if hand and hand != "durable":
+            # hand-off provenance, keyed only for snapshot-scored rows —
+            # mirroring the ledger's omitted-when-durable discipline
+            context["handoff"] = hand
         self.observe(result.step, result.metrics, context=context)
         if self.cfg.keep_top_k > 0 and self.ckpt_root and validator is not None:
-            self.selector.gc(self.ckpt_root,
-                             protect=validator.protect_set(),
-                             k=self.cfg.keep_top_k)
+            self._gc_validator = validator
+            self.hold_gc_until_durable(result.step, hand)
+            self.maybe_gc(validator)
+
+    def hold_gc_until_durable(self, step: int, handoff: str = "") -> bool:
+        """Register a GC hold when ``step``'s evidence is snapshot-scored
+        and its durable commit hasn't landed: deleting OTHER checkpoints on
+        its say-so is irreversible, so GC waits for the step's COMMIT (or
+        its failure).  Returns True when a hold was taken."""
+        if "snapshot" in str(handoff).split(",") \
+                and self._durable_state(step) == "pending":
+            self._gc_hold.add(step)
+            return True
+        return False
+
+    def _durable_state(self, step: int) -> str:
+        """``"pending" | "durable" | "failed"`` for ``step`` — the wired
+        ``durability`` callable when present, else the COMMIT marker."""
+        if self.durability is not None:
+            return str(self.durability(step))
+        if self.ckpt_root is None:
+            return "durable"
+        return "durable" if ckpt.is_committed(
+            ckpt._step_dir(self.ckpt_root, step)) else "pending"
+
+    def maybe_gc(self, validator: Any = None) -> bool:
+        """Run quality-aware GC unless a snapshot-scored step it would act
+        on is still awaiting its durable commit.  Holds resolve on either
+        outcome — DURABLE (the evidence persisted) or FAILED (the step's
+        checkpoint will never exist; nothing to protect-by-deferral).
+        Returns True when GC actually ran."""
+        validator = validator if validator is not None \
+            else self._gc_validator
+        if self.cfg.keep_top_k <= 0 or not self.ckpt_root \
+                or validator is None:
+            return False
+        self._gc_hold = {s for s in self._gc_hold
+                         if self._durable_state(s) == "pending"}
+        if self._gc_hold:
+            return False
+        self.selector.gc(self.ckpt_root,
+                         protect=validator.protect_set(),
+                         k=self.cfg.keep_top_k)
+        return True
 
     # -- ensemble (after training stopped / drained) ------------------------
     def build_ensemble(self, score_fn: Callable[[Any], float], *,

@@ -115,18 +115,30 @@ def _worker_main(args, suite, logger, ledger_path) -> int:
     queue = WorkQueue(ledger_path, worker_id, capabilities=caps,
                       lease_ttl=args.lease_ttl,
                       max_abandons=args.max_abandons, telemetry=tel)
+    spool = None
+    if args.handoff_spool:
+        from repro.handoff import SnapshotSpool
+        spool = SnapshotSpool(args.handoff_spool)
     worker = ValidatorWorker(
         args.ckpts_dir, suite,
         ledger=ValidationLedger(ledger_path,
                                 expected_tasks=suite.task_names,
                                 telemetry=tel),
-        queue=queue, logger=logger, worker_id=worker_id, telemetry=tel)
+        queue=queue, logger=logger, worker_id=worker_id, telemetry=tel,
+        snapshots=spool)
     watcher = CheckpointWatcher(args.ckpts_dir, telemetry=tel)
     print(f"[asyncval] worker {worker_id} caps={caps} queue={ledger_path}",
           file=sys.stderr)
     done = 0
     try:
         while True:
+            if spool is not None:
+                # pre-durable snapshots publish their units immediately;
+                # the (step, task) key dedupes against the later watcher
+                # discovery in the queue fold itself
+                for step in spool.poll():
+                    queue.publish(suite.plan_units(step), source="snapshot")
+                    watcher.mark_seen(step)
             for step in watcher.poll():
                 queue.publish(suite.plan_units(step))
             if worker.run_once():
@@ -252,6 +264,14 @@ def main(argv=None) -> int:
     ap.add_argument("--watch", action="store_true",
                     help="keep polling for new checkpoints (async mode)")
     ap.add_argument("--poll_interval", type=float, default=5.0)
+    ap.add_argument("--handoff_spool", default=None,
+                    help="lazy snapshot hand-off: also validate pre-durable "
+                         "param snapshots a trainer spills to this "
+                         "directory (point it at the trainer's "
+                         "--handoff-spool, e.g. under /dev/shm) — verdicts "
+                         "land before the durable checkpoint commits, "
+                         "bit-identical to durable-restore validation; the "
+                         "--ckpts_dir watcher stays the fallback")
     # -- validator fleet (repro.core.workqueue) -----------------------------
     ap.add_argument("--worker", action="store_true",
                     help="fleet worker mode: claim (step, task) work units "
@@ -553,6 +573,10 @@ def main(argv=None) -> int:
                 logdir, f"{args.run_name}_serve.jsonl"))
         serve = (serve_service, serve_promoter)
 
+    snapshots = None
+    if args.handoff_spool:
+        from repro.handoff import SnapshotSpool
+        snapshots = SnapshotSpool(args.handoff_spool)
     validator = AsyncValidator(
         args.ckpts_dir, suite, logger=MultiLogger(*loggers),
         policy=policy, controller=control,
@@ -560,6 +584,9 @@ def main(argv=None) -> int:
         ledger_path=os.path.join(logdir, f"{args.run_name}_ledger.jsonl"),
         poll_interval_s=args.poll_interval,
         telemetry=tel,
+        # pre-durable snapshots spilled by a --handoff trainer validate
+        # ahead of their checkpoint's COMMIT; watcher stays the fallback
+        snapshots=snapshots,
         # quality GC must never delete the checkpoint backing the live
         # (or mid-promotion) serving index
         extra_protect=serve[1].protect_set if serve is not None else None)

@@ -116,6 +116,11 @@ class ValidationResult:
     # byte-identical to pre-fleet ones); threaded like `engine` so
     # mixed-fleet ledgers are auditable offline.
     worker_id: str = ""
+    # which hand-off route supplied the params: "snapshot" when scored from
+    # a host-resident pre-durable snapshot (repro.handoff), "" when restored
+    # from the durable checkpoint — ledgered only when "snapshot", so
+    # pre-handoff ledgers stay byte-identical (the worker_id discipline).
+    handoff: str = ""
 
 
 @dataclasses.dataclass
@@ -223,6 +228,12 @@ class SuiteResult:
     @property
     def worker_id(self) -> str:
         names = {getattr(r, "worker_id", "") for r in self.tasks.values()}
+        return names.pop() if len(names) == 1 else ",".join(sorted(names))
+
+    @property
+    def handoff(self) -> str:
+        names = {getattr(r, "handoff", "") or "durable"
+                 for r in self.tasks.values()}
         return names.pop() if len(names) == 1 else ",".join(sorted(names))
 
 

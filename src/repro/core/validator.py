@@ -222,6 +222,12 @@ class ValidationLedger:
             wid = str(getattr(r, "worker_id", "") or "")
             if wid:
                 rec["worker_id"] = wid
+            # hand-off provenance: present only when the row was scored from
+            # a pre-durable snapshot (repro.handoff) — durable-restore rows
+            # omit the key, so pre-handoff ledgers stay byte-identical.
+            hand = str(getattr(r, "handoff", "") or "")
+            if hand == "snapshot":
+                rec["handoff"] = hand
             recs.append(rec)
         tel = self.telemetry
         with self._lock:
@@ -271,10 +277,16 @@ class ValidatorWorker:
                  worker_id: str = "",
                  heartbeat_interval_s: float = 0.25,
                  telemetry=None,
-                 max_errors: int = 256):
+                 max_errors: int = 256,
+                 snapshots: Any = None):
         self.ckpt_root = ckpt_root
         self.pipeline = pipeline
         self.queue = queue
+        # lazy snapshot hand-off source (repro.handoff SnapshotChannel or
+        # SnapshotSpool — anything with get(step) -> ParamSnapshot|None):
+        # consulted BEFORE the durable restore, so a step can be scored
+        # while its ckpt.save is still racing in the background.
+        self.snapshots = snapshots
         self.logger = logger
         self.params_extractor = params_extractor
         self.shardings = shardings
@@ -300,26 +312,61 @@ class ValidatorWorker:
         # whole-step path) pay the restore cost once
         self._params_step: Optional[int] = None
         self._params: Any = None
+        self._params_handoff = ""   # "snapshot" | "" for the cached params
 
     # -- shared execution body ---------------------------------------------
     def load_params(self, step: int):
         if self._params_step != step:
-            state, _ = ckpt.restore(self.ckpt_root, step,
-                                    shardings=self.shardings)
-            self._params = self.params_extractor(state)
+            snap = self.snapshots.get(step) \
+                if self.snapshots is not None else None
+            if snap is not None:
+                # pre-durable hand-off: reconstruct the exact state tree the
+                # durable restore would produce (same treedef, same leaf
+                # bytes, same shardings placement) — bit-parity is the
+                # contract, provenance is the only observable difference
+                self._params = self.params_extractor(
+                    snap.state(shardings=self.shardings))
+                self._params_handoff = "snapshot"
+            else:
+                state, _ = ckpt.restore(self.ckpt_root, step,
+                                        shardings=self.shardings)
+                self._params = self.params_extractor(state)
+                self._params_handoff = ""
             self._params_step = step
         return self._params
 
+    @property
+    def last_handoff(self) -> str:
+        """``"snapshot"`` when the cached params came from the hand-off
+        channel, ``""`` for a durable restore."""
+        return self._params_handoff
+
+    def invalidate_params_cache(self) -> None:
+        """Drop the cached restore.  Called on validation failure: the
+        cached tree may be the fault (a poisoned snapshot), and the retry —
+        which reaches the worker AFTER the validator discards the snapshot —
+        must re-resolve its source (then the durable checkpoint) instead of
+        re-scoring the cached copy."""
+        self._params_step = None
+        self._params = None
+        self._params_handoff = ""
+
     def _stamp(self, result):
-        """Attach this worker's id to every row of ``result`` (no-op for
-        anonymous single-process workers: rows stay bit-identical)."""
-        if not self.worker_id:
+        """Attach this worker's id and hand-off provenance to every row of
+        ``result`` (no-op for anonymous single-process durable-restore
+        workers: rows stay bit-identical)."""
+        updates = {}
+        if self.worker_id:
+            updates["worker_id"] = self.worker_id
+        if self._params_handoff:
+            updates["handoff"] = self._params_handoff
+        if not updates:
             return result
         if hasattr(result, "tasks"):            # SuiteResult
             return dataclasses.replace(result, tasks={
-                n: dataclasses.replace(r, worker_id=self.worker_id)
+                n: dataclasses.replace(r, **updates)
                 for n, r in result.tasks.items()})
-        return dataclasses.replace(result, worker_id=self.worker_id)
+        return dataclasses.replace(result, **updates)
 
     def log_result(self, result) -> None:
         if self.logger is None:
@@ -340,20 +387,30 @@ class ValidatorWorker:
         recorded — retry policy belongs to the caller (the AsyncValidator's
         watcher requeue, or the fleet's abandon budget)."""
         params = self.load_params(step)
-        result = self._stamp(self.pipeline.validate_params(
-            params, step=step, engine=self.engine))
+        try:
+            result = self._stamp(self.pipeline.validate_params(
+                params, step=step, engine=self.engine))
+        except BaseException:
+            self.invalidate_params_cache()
+            raise
         self.ledger.record(result)
         if self.telemetry is not None:
             self._observe_verdict(step)
         return result
 
     def _observe_verdict(self, step: int) -> None:
-        """Checkpoint-to-verdict latency: discovery mark → ledger row when
-        the watcher ran in this process, else COMMIT-marker mtime → now
+        """Checkpoint-to-verdict latency, from the earliest mark available:
+        ``produced`` (the trainer handed the state to the save path — the
+        edge the lazy hand-off shortens) → ``snapshotted`` (the hand-off
+        publish) → ``discovered`` (watcher poll) → COMMIT-marker mtime
         (wall clock; covers commit→verdict for cross-process fleets).
         Metrics only — never a scheduling input."""
         tel = self.telemetry
-        lag = tel.since("discovered", step)
+        lag = None
+        for mark in ("produced", "snapshotted", "discovered"):
+            lag = tel.since(mark, step)
+            if lag is not None:
+                break
         if lag is None:
             marker = os.path.join(ckpt._step_dir(self.ckpt_root, step),
                                   ckpt.COMMIT_MARKER)
@@ -375,6 +432,9 @@ class ValidatorWorker:
         try:
             result = self._stamp(self.pipeline.run_unit(
                 params, unit, engine=self.engine))
+        except BaseException:
+            self.invalidate_params_cache()
+            raise
         finally:
             stop_hb.set()
             hb.join()
@@ -458,11 +518,23 @@ class AsyncValidator:
                  workqueue: Optional[WorkQueue] = None,
                  worker_id: str = "",
                  extra_protect: Optional[Callable[[], set]] = None,
-                 telemetry=None):
+                 telemetry=None,
+                 snapshots: Any = None):
         self.ckpt_root = ckpt_root
         self.telemetry = telemetry
         self.watcher = CheckpointWatcher(ckpt_root, policy=policy,
                                          telemetry=telemetry)
+        # lazy snapshot hand-off (repro.handoff.SnapshotChannel): pending
+        # snapshots are validated BEFORE the watcher poll, and a publish
+        # wakes the loop immediately instead of waiting out poll_interval_s.
+        # The watcher remains the fallback + dedupe authority: snapshot-
+        # scored steps are mark_seen'd so their eventual durable discovery
+        # is consumed, and dropped/failed snapshots fall back to the
+        # watcher path untouched.
+        self.snapshots = snapshots
+        self._wake = threading.Event()
+        if snapshots is not None and hasattr(snapshots, "subscribe"):
+            snapshots.subscribe(lambda step: self._wake.set())
         self.max_num_valid = max_num_valid
         # completion = a row for every suite task (single-task pipelines and
         # doubles fall back to the one "default" task = v1 semantics)
@@ -487,7 +559,8 @@ class AsyncValidator:
                                     telemetry=telemetry),
             queue=workqueue, logger=logger,
             params_extractor=params_extractor, shardings=shardings,
-            engine=engine, worker_id=worker_id, telemetry=telemetry)
+            engine=engine, worker_id=worker_id, telemetry=telemetry,
+            snapshots=snapshots)
         self.poll_interval_s = poll_interval_s
         self.results: List[ValidationResult] = []
         self._stop = threading.Event()
@@ -560,7 +633,23 @@ class AsyncValidator:
 
     # -- core single-pass --------------------------------------------------
     def validate_pending(self) -> int:
-        return self._validate(self.watcher.poll())
+        n = self._validate(self._snapshot_pending())
+        return n + self._validate(self.watcher.poll())
+
+    def _snapshot_pending(self) -> List[int]:
+        """Claim the hand-off channel's unvalidated snapshots (ascending).
+        Ledgered steps are marked validated without a claim — the channel
+        can then retire them once durable."""
+        if self.snapshots is None:
+            return []
+        steps = []
+        for step in self.snapshots.pending():
+            if step in self.ledger:
+                self.snapshots.mark_validated(step)
+                continue
+            if self.snapshots.claim(step) is not None:
+                steps.append(step)
+        return steps
 
     def validate_step(self, step: int) -> int:
         """Validate one specific committed step NOW, bypassing the watcher
@@ -589,6 +678,10 @@ class AsyncValidator:
                 result = self.worker.run_step(step)
             except Exception as e:      # validation must never kill training
                 self.errors.append((step, repr(e)))
+                if self.snapshots is not None:
+                    # drop the (possibly poisoned) host copy: the retry goes
+                    # through the watcher + durable restore once committed
+                    self.snapshots.discard(step)
                 n_fail = self._failures.get(step, 0) + 1
                 self._failures[step] = n_fail
                 if n_fail <= self.max_retries:
@@ -597,6 +690,13 @@ class AsyncValidator:
                     self.watcher.mark_seen(step)
                 continue
             self._failures.pop(step, None)
+            if self.snapshots is not None \
+                    and self.worker.last_handoff == "snapshot":
+                # verdict landed from the hand-off path: free the snapshot
+                # (once durable) and consume the step's eventual watcher
+                # discovery so it is never validated twice
+                self.snapshots.mark_validated(step)
+                self.watcher.mark_seen(step)
             self.results.append(result)
             # adaptive scheduling feedback (BudgetPolicy): observed
             # validation latency drives the stride controller.
@@ -617,11 +717,14 @@ class AsyncValidator:
 
         def loop():
             while not self._stop.is_set():
+                self._wake.clear()
                 self.validate_pending()
                 if self.max_num_valid is not None \
                         and len(self.results) >= self.max_num_valid:
                     return
-                self._stop.wait(self.poll_interval_s)
+                # a snapshot publish sets _wake and cuts the sleep short —
+                # the hand-off path never waits out the watcher interval
+                self._wake.wait(self.poll_interval_s)
 
         self._thread = threading.Thread(target=loop, daemon=True)
         self._thread.start()
@@ -636,6 +739,7 @@ class AsyncValidator:
         ``"stop"``) and the wedged daemon thread is abandoned; whatever it
         eventually ledgers is still idempotent on restart."""
         self._stop.set()
+        self._wake.set()                # unblock a loop mid-sleep
         deadline = None if drain_timeout is None \
             else time.monotonic() + drain_timeout
         if self._thread is not None:

@@ -121,6 +121,7 @@ class UnitState:
     claim_seq: int = -1                 # seq of the winning claim
     abandons: int = 0                   # distributed retry counter
     completed_by: Optional[str] = None
+    source: str = ""                    # publish route ("snapshot" | "")
 
     def lease_live(self, head_seq: int, ttl: int) -> bool:
         return self.status == CLAIMED and head_seq - self.touch_seq <= ttl
@@ -165,7 +166,8 @@ class QueueState:
             if st is None:
                 unit = WorkUnit.make(key[0], key[1],
                                      rec.get("requires") or {})
-                self.units[key] = UnitState(unit=unit)
+                self.units[key] = UnitState(
+                    unit=unit, source=str(rec.get("source", "")))
                 self.events.append({"seq": seq, "event": "publish",
                                     "step": key[0], "task": key[1]})
             return                          # re-publish: no-op
@@ -366,20 +368,33 @@ class WorkQueue:
     def _append(self, recs: List[dict]) -> None:
         append_jsonl_atomic(self.path, recs)
 
-    def publish(self, units: Iterable[WorkUnit]) -> List[WorkUnit]:
+    def publish(self, units: Iterable[WorkUnit], *,
+                source: str = "") -> List[WorkUnit]:
         """Publish not-yet-known units (the watcher layer: discovered steps
         become claimable work).  Already-published units are skipped, so
-        re-publishing after a supervisor restart is idempotent."""
+        re-publishing after a supervisor restart is idempotent — a step
+        spilled by the hand-off spool (``source="snapshot"``) and later
+        discovered durable by the watcher publishes exactly once, keeping
+        first-route-wins dedupe in the fold itself.  ``source`` stamps the
+        unit record for audit; omitted when empty, so pre-handoff ledgers
+        stay byte-identical."""
         self.refresh()
         fresh = [u for u in units if u.key not in self.state.units]
         if fresh:
-            self._append([{"kind": "unit", "step": u.step, "task": u.task,
-                           "requires": u.requires_dict} for u in fresh])
+            recs = []
+            for u in fresh:
+                rec = {"kind": "unit", "step": u.step, "task": u.task,
+                       "requires": u.requires_dict}
+                if source:
+                    rec["source"] = source
+                recs.append(rec)
+            self._append(recs)
             self.refresh()
             tel = self.telemetry
             if tel is not None:
                 for u in fresh:
-                    tel.event("published", step=u.step, task=u.task)
+                    tel.event("published", step=u.step, task=u.task,
+                              **({"source": source} if source else {}))
         return fresh
 
     def try_claim(self, unit: WorkUnit) -> bool:

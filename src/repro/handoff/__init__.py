@@ -1,0 +1,41 @@
+"""Lazy snapshot hand-off — validate checkpoints before they are durable.
+
+Asyncval minimizes the lag between a checkpoint existing and a verdict on
+it, yet the watcher path can only start after full durable serialization
+plus a poll interval: checkpoint-to-verdict latency is dominated by an
+O(serialize + poll) prefix that has nothing to do with validation itself.
+Following DataStates-LLM's lazy-checkpointing model, the trainer hands the
+validator a *host-resident parameter snapshot* the moment the device→host
+copy lands, while the durable two-phase ``ckpt.save`` races in the
+background — cutting the prefix to O(device→host copy).
+
+Three pieces:
+
+  * :class:`~repro.handoff.snapshot.ParamSnapshot` — one step's host
+    pytree (numpy leaves + serialized treedef); ``state(shardings=)``
+    reconstructs exactly what ``ckpt.restore`` would return, so snapshot
+    validation is bit-for-bit identical to durable validation.
+  * :class:`~repro.handoff.spool.SnapshotSpool` — the cross-process
+    representation: mmap-able ``.npy`` arrays under a commit-marker
+    directory (the ``ckpt.save`` two-phase discipline) plus an
+    append-only fsync'd announce log (``core.jsonl``), so fleet
+    ``ValidatorWorker`` processes can claim snapshots torn-write-safely.
+    Point it at a ``/dev/shm`` path to keep the spill in memory.
+  * :class:`~repro.handoff.channel.SnapshotChannel` — the bounded ring
+    between trainer and validator: in-process handles for the solo
+    ``AsyncValidator``, optional spill through a spool, drop-oldest-
+    unvalidated backpressure (training never blocks), and the durability
+    state (``pending``/``durable``/``failed``) the control plane gates
+    irreversible actions on.
+
+The watcher path remains the fallback and the dedupe authority: a step
+that arrives via both routes is validated once (ledger idempotency), and
+a snapshot lost to a crash or backpressure is simply scored later from
+the durable checkpoint.
+"""
+
+from repro.handoff.channel import SnapshotChannel
+from repro.handoff.snapshot import ParamSnapshot
+from repro.handoff.spool import SnapshotSpool
+
+__all__ = ["ParamSnapshot", "SnapshotChannel", "SnapshotSpool"]

@@ -1,0 +1,73 @@
+"""Host-resident parameter snapshots — the unit the hand-off channel moves.
+
+A :class:`ParamSnapshot` is one step's checkpoint *state tree* (params +
+optimizer state, exactly what the trainer saves) flattened to numpy leaves
+plus the serialized treedef — the same ``(leaves, treedef)`` encoding
+``repro.ckpt.checkpoint`` writes to disk, minus the disk.  Because
+:meth:`ParamSnapshot.state` reconstructs the tree the same way
+``ckpt.restore`` does (unflatten host arrays, then ``jax.device_put`` per
+leaf when shardings are given), validating from a snapshot is bit-for-bit
+identical to validating the step restored from the durable checkpoint —
+the parity contract the hand-off subsystem is built on.
+
+jax is imported lazily (inside the methods that need it) so the spool's
+cross-process consumers — and the SIGKILL crash tests — can import this
+module with numpy alone.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ParamSnapshot:
+    """One step's host-resident checkpoint state.
+
+    ``leaves`` are numpy arrays in treedef order (``np.asarray`` of the
+    device arrays — the identical bytes ``ckpt.save``/``restore`` would
+    round-trip through ``.npy`` files).  ``treedef_hex`` is the pytree
+    structure serialized with the same proto encoding the checkpoint
+    manifest uses, so a snapshot re-read from the spool in another
+    process reconstructs the exact same tree."""
+
+    step: int
+    leaves: List[np.ndarray]
+    treedef_hex: str
+    extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def from_tree(cls, step: int, tree: Any,
+                  extra: Optional[dict] = None) -> "ParamSnapshot":
+        """Flatten ``tree`` (device or host arrays) into a snapshot.  The
+        ``np.asarray`` per leaf blocks until that leaf's device→host copy
+        lands — callers on the training hot path issue
+        ``copy_to_host_async()`` first (see ``ckpt.AsyncSaver``) and build
+        the snapshot on a background thread."""
+        import jax
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        return cls(step=int(step),
+                   leaves=[np.asarray(x) for x in leaves],
+                   treedef_hex=treedef.serialize_using_proto().hex(),
+                   extra=dict(extra or {}))
+
+    def state(self, *, shardings: Any = None) -> Any:
+        """Reconstruct the checkpoint state tree — ``ckpt.restore``'s
+        return value, without touching disk.  ``shardings`` (a pytree of
+        Shardings, same structure) places leaves for an arbitrary
+        validator mesh exactly as ``restore(..., shardings=)`` would."""
+        import jax
+        treedef = jax.tree_util.PyTreeDef.deserialize_using_proto(
+            jax.tree_util.default_registry, bytes.fromhex(self.treedef_hex))
+        tree = jax.tree_util.tree_unflatten(treedef, list(self.leaves))
+        if shardings is not None:
+            tree = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(x.nbytes) for x in self.leaves)

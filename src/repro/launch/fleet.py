@@ -126,8 +126,16 @@ class FleetSupervisor:
                                                List[WorkUnit]]] = None,
                  lease_ttl: int = 16, max_abandons: int = 2,
                  extra_protect: Optional[Callable[[], set]] = None,
-                 telemetry=None):
+                 telemetry=None,
+                 snapshots: Any = None):
         self.ckpt_root = ckpt_root
+        # lazy hand-off spool (repro.handoff.SnapshotSpool): announced
+        # snapshot steps publish their units BEFORE the durable COMMIT
+        # surfaces via the watcher; workers whose ``snapshots`` source maps
+        # the same spool then score from the mmap'd spill.  Publication is
+        # keyed (step, task), so the watcher's later discovery of the same
+        # step collapses in the fold — first route wins, exactly once.
+        self.snapshots = snapshots
         # GC protections beyond fleet state — e.g. the serving tier's
         # Promoter.protect_set (live + mid-promotion checkpoint steps)
         self.extra_protect = extra_protect
@@ -149,9 +157,18 @@ class FleetSupervisor:
 
     # -- work publication ---------------------------------------------------
     def publish_pending(self) -> int:
-        """Publish every newly committed (policy-selected) step's units.
-        Idempotent: re-publication after a restart collapses in the fold."""
+        """Publish every newly announced snapshot's and newly committed
+        (policy-selected) step's units.  Idempotent: re-publication after a
+        restart — or of a step both routes surface — collapses in the
+        fold."""
         n = 0
+        if self.snapshots is not None:
+            for step in self.snapshots.poll():
+                n += len(self.queue.publish(self.plan_units(step),
+                                            source="snapshot"))
+                # the durable checkpoint may land later; consume its watcher
+                # discovery so the policy's skip accounting stays truthful
+                self.watcher.mark_seen(step)
         for step in self.watcher.poll():
             n += len(self.queue.publish(self.plan_units(step)))
         return n
@@ -177,9 +194,11 @@ class FleetSupervisor:
             fed += 1
             cfg = self.control.cfg
             if cfg.keep_top_k > 0 and self.control.ckpt_root:
-                self.control.selector.gc(self.control.ckpt_root,
-                                         protect=self.protect_set(),
-                                         k=cfg.keep_top_k)
+                # durability gate: snapshot-scored evidence defers the
+                # irreversible GC until the step's durable commit lands
+                self.control.hold_gc_until_durable(
+                    step, (context or {}).get("handoff", ""))
+                self.control.maybe_gc(self)
         return fed
 
     def protect_set(self) -> set:

@@ -104,7 +104,18 @@ def run(args) -> dict:
     keep_top_k = getattr(args, "keep_top_k", 0)
     ensemble_top_k = getattr(args, "ensemble_top_k", 0)
     policy_kind = getattr(args, "policy", "fifo")
+    handoff = getattr(args, "handoff", False)
     control_on = patience > 0 or keep_top_k > 0 or ensemble_top_k > 0
+    # lazy snapshot hand-off: the trainer publishes each checkpoint's host
+    # copy to a bounded channel the moment it lands; the validator scores
+    # it while the durable save is still racing.  Watcher stays fallback.
+    snapshots = None
+    if handoff:
+        from repro.handoff import SnapshotChannel, SnapshotSpool
+        spool_root = getattr(args, "handoff_spool", "") or None
+        snapshots = SnapshotChannel(
+            capacity=getattr(args, "handoff_capacity", 2),
+            spool=SnapshotSpool(spool_root) if spool_root else None)
     # a STOP marker is one run's verdict, not the workdir's: clear a stale
     # one so a restarted/continued run trains instead of halting at step 0.
     if os.path.exists(stop_file):
@@ -112,7 +123,8 @@ def run(args) -> dict:
     tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
                          ckpt_dir=ckpt_dir, log_every=args.ckpt_every,
                          async_save=True,
-                         stop_file=stop_file if patience > 0 else None)
+                         stop_file=stop_file if patience > 0 else None,
+                         snapshots=snapshots)
     trainer = Trainer(tcfg, lambda p, b: contrastive_loss(p, spec, b),
                       opt, params,
                       _contrastive_batches(ds, spec, args.batch_size),
@@ -145,13 +157,16 @@ def run(args) -> dict:
                              ensemble_top_k=ensemble_top_k)
         control = ControlPlane(ckpt_dir, ccfg, stop_path=stop_file,
                                event_path=os.path.join(args.workdir,
-                                                       "control.jsonl"))
+                                                       "control.jsonl"),
+                               durability=snapshots.durability
+                               if snapshots is not None else None)
     policy = BudgetPolicy() if policy_kind == "budget" \
         else Policy(kind=policy_kind, stride=getattr(args, "stride", 1))
     validator = AsyncValidator(
         ckpt_dir, suite, policy=policy, controller=control,
         logger=JSONLLogger(os.path.join(args.workdir, "valid.jsonl")),
-        ledger_path=os.path.join(args.workdir, "ledger.jsonl"))
+        ledger_path=os.path.join(args.workdir, "ledger.jsonl"),
+        snapshots=snapshots)
     if control is not None:
         # restart: warm the ranking from the prior session's ledger so
         # quality-aware GC never forgets already-validated checkpoints
@@ -179,6 +194,10 @@ def run(args) -> dict:
         validator.start()
         trainer.run(on_metrics=feed_control)
         validator.stop(drain=True)
+    if control is not None:
+        # every durable save has landed (trainer.run waits the saver out):
+        # release any durability-gated GC held on snapshot-scored evidence
+        control.maybe_gc(validator)
 
     ensemble = None
     if control is not None and ensemble_top_k > 0:
@@ -247,6 +266,21 @@ def main():
     ap.add_argument("--policy", default="fifo",
                     choices=["fifo", "latest_first", "stride", "budget"])
     ap.add_argument("--stride", type=int, default=1)
+    # lazy snapshot hand-off (repro.handoff)
+    ap.add_argument("--handoff", action="store_true",
+                    help="validate checkpoints from host-resident snapshots "
+                         "the moment the device->host copy lands, before "
+                         "the durable save commits (watcher stays the "
+                         "fallback; GC/soup/promotion still wait for the "
+                         "durable COMMIT)")
+    ap.add_argument("--handoff-capacity", type=int, default=2,
+                    help="snapshot ring size; over capacity the oldest "
+                         "unclaimed snapshot is dropped and its step falls "
+                         "back to the watcher path (training never blocks)")
+    ap.add_argument("--handoff-spool", default="",
+                    help="spill directory (e.g. under /dev/shm) mirroring "
+                         "the ring for cross-process fleet workers; empty "
+                         "= in-process hand-off only")
     args = ap.parse_args()
     run(args)
 

@@ -6,6 +6,8 @@ served query batch, is recorded as a *span* (an interval) or an *event*
 hand-off order::
 
     produced   -> trainer committed the checkpoint (event)
+    snapshotted-> hand-off channel published a pre-durable host snapshot
+                  (event; absent on the classic durable-only path)
     discovered -> watcher saw the COMMIT marker (event)
     published  -> fleet queue exposed a (step, task) unit (event)
     claimed    -> a worker won the claim race for a unit (event)
@@ -72,9 +74,9 @@ __all__ = ["SpanTracer", "read_trace", "LIFECYCLE_STAGES"]
 
 #: canonical hand-off order; the exporter sorts same-timestamp records by it
 LIFECYCLE_STAGES: Tuple[str, ...] = (
-    "produced", "discovered", "published", "claimed", "store_build",
-    "staged", "encoded", "scored", "recorded", "selected", "promoted",
-    "served")
+    "produced", "snapshotted", "discovered", "published", "claimed",
+    "store_build", "staged", "encoded", "scored", "recorded", "selected",
+    "promoted", "served")
 
 
 class _Span:

@@ -1,0 +1,715 @@
+"""PR-10 lazy snapshot hand-off: validate checkpoints before they are
+durable.
+
+Locks the subsystem's four contracts:
+
+  * **bit-parity** — a snapshot-scored verdict is bit-for-bit the durable-
+    restore verdict, across retrieval/rerank x streaming/materialized x
+    score_dtype (the hand-off changes WHEN validation runs, never what it
+    computes);
+  * **exactly-once** — a step arriving via both the channel and the
+    watcher produces one (step, task) row set; the watcher stays the
+    dedupe authority;
+  * **crash/torn safety** — a trainer SIGKILLed mid-spill leaves a
+    snapshot no reader ever claims, and the watcher fallback still scores
+    the step from its durable checkpoint;
+  * **durability gating** — irreversible actions (quality GC) wait for
+    the step's durable COMMIT; reversible decisions (selection, early
+    stop) act on provisional snapshot-scored rows immediately.
+
+Plus the satellite regressions: the async saver never blocks the training
+thread on the device->host transfer, ledger rows without hand-off
+provenance stay byte-identical to pre-handoff ones, and the work queue
+records the snapshot publish route.
+"""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+from repro.control import ControlConfig, ControlPlane
+from repro.core.samplers import RerankTopK
+from repro.core.suite import (ValidationConfig, ValidationSuite,
+                              ValidationTask)
+from repro.core.validator import AsyncValidator, ValidationLedger, \
+    ValidatorWorker
+from repro.core.workqueue import WorkQueue, replay
+from repro.data import corpus as synthetic_ds
+from repro.handoff import ParamSnapshot, SnapshotChannel, SnapshotSpool
+from repro.models.biencoder import EncoderSpec
+
+DIM = 16
+VOCAB = 211
+
+
+def _toy_encode(params, tokens, mask):
+    emb = jnp.take(params["table"], tokens, axis=0)
+    m = mask.astype(emb.dtype)[..., None]
+    v = (emb * m).sum(1) / jnp.clip(m.sum(1), 1e-6)
+    return v / jnp.clip(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-6)
+
+
+def toy_spec():
+    return EncoderSpec(
+        name="toy", dim=DIM, encode_query=_toy_encode,
+        encode_passage=_toy_encode,
+        init=lambda rng: {"table": jax.random.normal(rng, (VOCAB, DIM))},
+        q_max_len=10, p_max_len=26)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return synthetic_ds.synthetic_retrieval_dataset(7, n_passages=90,
+                                                    n_queries=10,
+                                                    vocab=VOCAB)
+
+
+@pytest.fixture(scope="module")
+def baseline_run(ds):
+    return synthetic_ds.lexical_baseline_run(ds, k=20)
+
+
+def toy_params(seed=0):
+    return toy_spec().init(jax.random.PRNGKey(seed))
+
+
+def make_suite(ds, baseline_run, *, mode="retrieval", engine="streaming",
+               score_dtype="f32"):
+    sampler = RerankTopK(depth=10) if mode == "rerank" else None
+    return ValidationSuite(toy_spec(), [
+        ValidationTask("default", ds.corpus, ds.queries, ds.qrels,
+                       sampler=sampler, baseline_run=baseline_run),
+    ], ValidationConfig(metrics=("MRR@10",), mode=mode, k=10,
+                        batch_size=16, engine=engine,
+                        score_dtype=score_dtype))
+
+
+# ---------------------------------------------------------------------------
+# ParamSnapshot / SnapshotSpool primitives
+# ---------------------------------------------------------------------------
+
+def test_param_snapshot_roundtrip_mixed_dtypes():
+    tree = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": jnp.full((5,), 1.5, jnp.bfloat16)}
+    snap = ParamSnapshot.from_tree(3, tree, extra={"tag": "x"})
+    state = snap.state()
+    assert jax.tree_util.tree_structure(state) \
+        == jax.tree_util.tree_structure(tree)
+    assert np.array_equal(np.asarray(state["w"]), np.asarray(tree["w"]))
+    assert state["b"].dtype == tree["b"].dtype
+    assert np.array_equal(np.asarray(state["b"], np.float32),
+                          np.asarray(tree["b"], np.float32))
+    assert snap.extra == {"tag": "x"}
+    assert snap.nbytes > 0
+
+
+def test_spool_roundtrip_and_mmap(tmp_path):
+    spool = SnapshotSpool(str(tmp_path / "sp"))
+    tree = {"w": jnp.ones((4, 4)), "h": jnp.zeros((2,), jnp.bfloat16)}
+    snap = ParamSnapshot.from_tree(10, tree)
+    spool.publish(10, snap.leaves, snap.treedef_hex, extra=snap.extra)
+    assert spool.has(10) and spool.steps() == [10]
+    got = spool.get(10)
+    state = got.state()
+    assert np.array_equal(np.asarray(state["w"]), np.asarray(tree["w"]))
+    assert state["h"].dtype == tree["h"].dtype
+
+
+def test_spool_torn_spill_is_invisible(tmp_path):
+    """A snapshot dir without COMMIT (crash mid-spill) is never claimed."""
+    root = str(tmp_path / "sp")
+    spool = SnapshotSpool(root)
+    # fake a torn spill: arrays + manifest present, COMMIT missing
+    torn = os.path.join(root, "snap_0000000007")
+    os.makedirs(os.path.join(torn, "arrays"))
+    np.save(os.path.join(torn, "arrays", "00000.npy"), np.ones(3))
+    with open(os.path.join(torn, "manifest.json"), "w") as f:
+        json.dump({"step": 7, "treedef": "", "leaves": []}, f)
+    # announce it as the writer would have, just before dying
+    from repro.core.jsonl import append_jsonl_atomic
+    append_jsonl_atomic(spool.announce_path,
+                        [{"kind": "snapshot", "step": 7}])
+    assert not spool.has(7)
+    assert spool.steps() == []
+    assert spool.poll() == []           # marker authority beats announce
+    assert spool.load(7) is None
+    assert spool.get(7) is None
+    assert spool.pending() == []
+
+
+def test_spool_consumer_surface(tmp_path):
+    spool = SnapshotSpool(str(tmp_path / "sp"))
+    snap = ParamSnapshot.from_tree(4, {"w": jnp.ones(2)})
+    spool.publish(4, snap.leaves, snap.treedef_hex)
+    reader = SnapshotSpool(spool.root)
+    assert reader.pending() == [4]
+    assert reader.pending() == [4]      # unclaimed: stays pending
+    got = reader.claim(4)
+    assert got is not None and got.step == 4
+    assert reader.pending() == []
+    # retire removes the spill; a later claim falls through to None
+    spool.retire(4)
+    assert reader.claim(4) is None
+
+
+# ---------------------------------------------------------------------------
+# SnapshotChannel semantics
+# ---------------------------------------------------------------------------
+
+def _snap(step, val=1.0):
+    return ParamSnapshot.from_tree(step, {"w": jnp.full((2,), val)})
+
+
+def test_channel_backpressure_drops_oldest_unclaimed():
+    ch = SnapshotChannel(capacity=2)
+    for s in (1, 2, 3):
+        ch.publish(_snap(s))
+    assert ch.dropped == [1]
+    assert ch.pending() == [2, 3]
+    assert ch.get(1) is None            # evicted; watcher owns step 1 now
+
+
+def test_channel_eviction_spares_claimed_then_falls_back():
+    ch = SnapshotChannel(capacity=2)
+    ch.publish(_snap(1))
+    ch.publish(_snap(2))
+    held = ch.claim(1)
+    assert held is not None
+    ch.publish(_snap(3))                # evicts 2 (oldest UNCLAIMED)
+    assert ch.dropped == [2]
+    assert ch.get(1) is not None        # claimed entry survived
+    # with NO unclaimed candidate, publish still never blocks: the claimed
+    # entry is evicted from the ring, but the claimant holds its own
+    # reference so its in-flight validation is unaffected
+    tight = SnapshotChannel(capacity=1)
+    tight.publish(_snap(1))
+    held = tight.claim(1)
+    tight.publish(_snap(2))
+    assert tight.dropped == [1]
+    assert tight.get(1) is None
+    assert held.step == 1
+
+
+def test_channel_durability_and_retirement(tmp_path):
+    spool = SnapshotSpool(str(tmp_path / "sp"))
+    ch = SnapshotChannel(capacity=4, spool=spool)
+    ch.publish(_snap(5))
+    assert ch.durability(5) == "pending"
+    assert ch.durability(999) == "durable"      # never published => durable
+    assert spool.has(5)
+    ch.claim(5)
+    ch.mark_validated(5)
+    assert spool.has(5)                 # validated but NOT durable: kept
+    ch.mark_durable(5)
+    assert ch.durability(5) == "durable"
+    assert not spool.has(5)             # validated + durable: retired
+    ch.publish(_snap(6))
+    ch.mark_failed(6, error=RuntimeError("disk full"))
+    assert ch.durability(6) == "failed"
+    assert ch.get(6) is None and not spool.has(6)
+
+
+def test_channel_subscriber_wakes_on_publish():
+    ch = SnapshotChannel()
+    woke = []
+    ch.subscribe(woke.append)
+    ch.publish(_snap(9))
+    assert woke == [9]
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: the async saver never blocks the training thread
+# ---------------------------------------------------------------------------
+
+class _SlowLeaf:
+    """Device-array stand-in: copy_to_host_async is instant (a DMA
+    enqueue), materializing via np.asarray is slow (the transfer wait)."""
+
+    def __init__(self, value, record, delay=0.25):
+        self._value = np.asarray(value)
+        self._record = record
+        self._delay = delay
+
+    def copy_to_host_async(self):
+        self._record.append(("enqueue", threading.get_ident()))
+
+    def __array__(self, dtype=None, copy=None):
+        self._record.append(("materialize", threading.get_ident()))
+        time.sleep(self._delay)
+        return self._value if dtype is None \
+            else self._value.astype(dtype)
+
+
+def test_async_saver_training_thread_never_waits_on_transfer(tmp_path):
+    record = []
+    tree = {"a": _SlowLeaf(np.ones(3), record),
+            "b": _SlowLeaf(np.zeros(2), record)}
+    saver = ckpt.AsyncSaver()
+    copied = []
+    t0 = time.monotonic()
+    saver.save(str(tmp_path / "ck"), 1, tree,
+               on_host_copy=lambda step, host: copied.append(step))
+    issue_time = time.monotonic() - t0
+    # the calling thread only enqueued the copies — far below the 2 x 0.25s
+    # a synchronous np.asarray of both leaves would cost
+    assert issue_time < 0.2, f"save() blocked the caller for {issue_time}s"
+    caller = threading.get_ident()
+    assert [r for r in record if r[0] == "enqueue"] \
+        == [("enqueue", caller)] * 2
+    assert all(tid != caller for op, tid in record if op == "materialize") \
+        or not [r for r in record if r[0] == "materialize"]
+    saver.wait()
+    # materialization happened exactly once per leaf, on the background
+    # thread, and the host-copy hook fired before the durable commit
+    mats = [r for r in record if r[0] == "materialize"]
+    assert len(mats) == 2 and all(tid != caller for _, tid in mats)
+    assert copied == [1]
+    assert ckpt.list_steps(str(tmp_path / "ck")) == [1]
+
+
+def test_async_saver_host_copy_failure_spares_durable_save(tmp_path):
+    saver = ckpt.AsyncSaver()
+
+    def boom(step, host):
+        raise RuntimeError("publish failed")
+
+    saver.save(str(tmp_path / "ck"), 2, {"w": np.ones(2)},
+               on_host_copy=boom)
+    with pytest.raises(RuntimeError, match="publish failed"):
+        saver.wait()                    # surfaced...
+    assert ckpt.list_steps(str(tmp_path / "ck")) == [2]   # ...but committed
+
+
+def test_async_saver_failure_hook_fires_on_save_error(tmp_path):
+    saver = ckpt.AsyncSaver()
+    failed = []
+    path = tmp_path / "blocked"
+    path.write_text("not a directory")
+    saver.save(str(path), 3, {"w": np.ones(2)},
+               on_failure=lambda step, e: failed.append(step),
+               on_durable=lambda step: failed.append(("durable", step)))
+    with pytest.raises(Exception):
+        saver.wait()
+    assert failed == [3]
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: snapshot-vs-durable bit parity (satellite 3 matrix)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["retrieval", "rerank"])
+@pytest.mark.parametrize("engine", ["streaming", "materialized"])
+@pytest.mark.parametrize("score_dtype", ["f32", "int8"])
+def test_snapshot_parity_matrix(tmp_path, ds, baseline_run, mode, engine,
+                                score_dtype):
+    """The paper-level contract: scoring from a pre-durable snapshot is
+    bit-for-bit the durable-restore validation — across modes, engines,
+    and scoring precisions."""
+    root = str(tmp_path / "ck")
+    params = toy_params()
+    state = {"params": params}
+    ckpt.save(root, 1, state)
+
+    def result_rows(snapshots):
+        suite = make_suite(ds, baseline_run, mode=mode, engine=engine,
+                           score_dtype=score_dtype)
+        ledger = ValidationLedger(None, expected_tasks=suite.task_names)
+        worker = ValidatorWorker(root, suite, ledger=ledger,
+                                 snapshots=snapshots)
+        res = worker.run_step(1)
+        return res, ledger.rows(), worker.last_handoff
+
+    ch = SnapshotChannel()
+    ch.publish(ParamSnapshot.from_tree(1, state))
+    res_snap, rows_snap, hand_snap = result_rows(ch)
+    res_dur, rows_dur, hand_dur = result_rows(None)
+
+    assert hand_snap == "snapshot" and hand_dur == ""
+    # metrics bit-equal (== on floats, not allclose)
+    assert res_snap.metrics == res_dur.metrics
+    for name in res_dur.tasks:
+        assert res_snap.tasks[name].metrics == res_dur.tasks[name].metrics
+    # provenance: snapshot rows carry handoff="snapshot"; durable rows
+    # omit the key entirely (byte-identity with pre-handoff ledgers)
+    for row in rows_snap:
+        assert row["handoff"] == "snapshot"
+    for row in rows_dur:
+        assert "handoff" not in row
+    # everything else in the rows is identical
+    strip = lambda r: {k: v for k, v in r.items()
+                       if k not in ("handoff", "timings")}
+    assert [strip(r) for r in rows_snap] == [strip(r) for r in rows_dur]
+
+
+def test_snapshot_parity_through_spool(tmp_path, ds, baseline_run):
+    """Cross-process route: mmap'd spool leaves score bit-identically."""
+    root = str(tmp_path / "ck")
+    state = {"params": toy_params()}
+    ckpt.save(root, 2, state)
+    spool = SnapshotSpool(str(tmp_path / "sp"))
+    snap = ParamSnapshot.from_tree(2, state)
+    spool.publish(2, snap.leaves, snap.treedef_hex)
+
+    def run(snapshots):
+        suite = make_suite(ds, baseline_run)
+        worker = ValidatorWorker(
+            root, suite,
+            ledger=ValidationLedger(None,
+                                    expected_tasks=suite.task_names),
+            snapshots=snapshots)
+        return worker.run_step(2)
+
+    res_spool = run(SnapshotSpool(spool.root))
+    res_dur = run(None)
+    assert res_spool.metrics == res_dur.metrics
+    assert res_spool.handoff == "snapshot" and res_dur.handoff == "durable"
+
+
+# ---------------------------------------------------------------------------
+# Satellite 2: exactly-once when both routes surface a step
+# ---------------------------------------------------------------------------
+
+def test_no_double_validation_snapshot_then_watcher(tmp_path, ds,
+                                                    baseline_run):
+    root = str(tmp_path / "ck")
+    state = {"params": toy_params()}
+    ch = SnapshotChannel()
+    suite = make_suite(ds, baseline_run)
+    v = AsyncValidator(root, suite, snapshots=ch,
+                       ledger_path=str(tmp_path / "ledger.jsonl"))
+    # snapshot first (pre-durable), then the durable commit
+    ch.publish(ParamSnapshot.from_tree(1, state))
+    assert v.validate_pending() == 1
+    ckpt.save(root, 1, state)
+    # the watcher discovers step 1 now — but the snapshot verdict consumed it
+    assert v.validate_pending() == 0
+    keys = [(r["step"], r["task"]) for r in v.ledger.rows()]
+    assert sorted(keys) == sorted(set(keys)), "duplicate (step, task) rows"
+    assert keys == [(1, "default")]
+    assert v.ledger.rows()[0]["handoff"] == "snapshot"
+
+
+def test_no_double_validation_watcher_then_snapshot(tmp_path, ds,
+                                                    baseline_run):
+    root = str(tmp_path / "ck")
+    state = {"params": toy_params()}
+    ch = SnapshotChannel()
+    suite = make_suite(ds, baseline_run)
+    v = AsyncValidator(root, suite, snapshots=ch,
+                       ledger_path=str(tmp_path / "ledger.jsonl"))
+    # durable first (fast save), snapshot published late
+    ckpt.save(root, 1, state)
+    assert v.validate_pending() == 1
+    ch.publish(ParamSnapshot.from_tree(1, state))
+    assert v.validate_pending() == 0    # ledger idempotency consumed it
+    assert [(r["step"], r["task"]) for r in v.ledger.rows()] \
+        == [(1, "default")]
+    assert "handoff" not in v.ledger.rows()[0]
+    # the late snapshot is marked validated so the channel can retire it
+    assert ch.pending() == []
+
+
+def test_snapshot_failure_falls_back_to_watcher(tmp_path, ds, baseline_run):
+    """A poisoned snapshot is discarded; the durable path still scores."""
+    root = str(tmp_path / "ck")
+    state = {"params": toy_params()}
+    ch = SnapshotChannel()
+    suite = make_suite(ds, baseline_run)
+    v = AsyncValidator(root, suite, snapshots=ch,
+                       ledger_path=str(tmp_path / "ledger.jsonl"))
+    # a snapshot whose tree is garbage -> validation raises
+    bad = ParamSnapshot.from_tree(1, {"not_params": jnp.ones(2)})
+    ch.publish(bad)
+    assert v.validate_pending() == 0
+    assert len(v.errors) == 1
+    assert ch.get(1) is None            # discarded, not retried from host
+    ckpt.save(root, 1, state)
+    assert v.validate_pending() == 1    # watcher fallback, durable restore
+    assert "handoff" not in v.ledger.rows()[0]
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3: SIGKILL the trainer mid-spill
+# ---------------------------------------------------------------------------
+
+_CRASHER = r"""
+import os, sys, signal
+import numpy as np
+sys.path.insert(0, {src!r})
+from repro.handoff.spool import SnapshotSpool, _snap_dir
+from repro.core.jsonl import append_jsonl_atomic
+
+root = {root!r}
+spool = SnapshotSpool(root)
+# one COMPLETE snapshot (step 1)...
+spool.publish(1, [np.ones(4, np.float32)], "aa")
+# ...then die mid-spill of step 2: arrays written, no COMMIT, announce
+# already appended (worst interleaving for a reader)
+torn = _snap_dir(root, 2) + ".tmp"
+os.makedirs(os.path.join(torn, "arrays"))
+np.save(os.path.join(torn, "arrays", "00000.npy"), np.ones(4, np.float32))
+os.rename(torn, _snap_dir(root, 2))
+append_jsonl_atomic(os.path.join(root, "announce.jsonl"),
+                    [{{"kind": "snapshot", "step": 2}}])
+os.kill(os.getpid(), signal.SIGKILL)
+"""
+
+
+def test_sigkilled_trainer_torn_spill_never_claimed(tmp_path, ds,
+                                                    baseline_run):
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    spool_root = str(tmp_path / "sp")
+    code = _CRASHER.format(src=os.path.abspath(src), root=spool_root)
+    proc = subprocess.run([sys.executable, "-c", code])
+    assert proc.returncode == -signal.SIGKILL
+    reader = SnapshotSpool(spool_root)
+    # step 1 committed before the crash; step 2's torn spill is invisible
+    assert reader.steps() == [1]
+    assert reader.pending() == [1]
+    assert reader.get(2) is None
+    assert reader.claim(1).step == 1    # drain the pre-crash snapshot
+    # the watcher fallback still owns step 2: a durable checkpoint written
+    # by the (restarted) trainer validates through the normal path
+    root = str(tmp_path / "ck")
+    state = {"params": toy_params()}
+    ckpt.save(root, 2, state)
+    suite = make_suite(ds, baseline_run)
+    v = AsyncValidator(root, suite, snapshots=reader,
+                       ledger_path=str(tmp_path / "ledger.jsonl"))
+    assert v.validate_pending() == 1
+    rows = v.ledger.rows()
+    assert [(r["step"], r["task"]) for r in rows] == [(2, "default")]
+    assert "handoff" not in rows[0]     # scored from the durable restore
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3: durability gate — GC deferred, early stop provisional
+# ---------------------------------------------------------------------------
+
+def _score_rows(v, ch, root, state, step, value, *, durable):
+    """Publish + (optionally) commit one step and validate it."""
+    if durable:
+        ckpt.save(root, step, state)
+        ch.publish(ParamSnapshot.from_tree(step, state))
+        ch.mark_durable(step)
+    else:
+        ch.publish(ParamSnapshot.from_tree(step, state))
+    return v.validate_pending()
+
+
+def test_gc_waits_for_durable_commit(tmp_path, ds, baseline_run):
+    root = str(tmp_path / "ck")
+    ch = SnapshotChannel(capacity=8)
+    suite = make_suite(ds, baseline_run)
+    control = ControlPlane(root, ControlConfig(metric="MRR@10",
+                                               keep_top_k=1),
+                           durability=ch.durability)
+    v = AsyncValidator(root, suite, snapshots=ch, controller=control,
+                       ledger_path=str(tmp_path / "ledger.jsonl"))
+    state = {"params": toy_params()}
+    # two durable validated steps: GC may act freely
+    for step in (1, 2):
+        ckpt.save(root, step, state)
+        ch.publish(ParamSnapshot.from_tree(step, state))
+        ch.mark_durable(step)
+    v.validate_pending()
+    n_after_durable = len(ckpt.list_steps(root))
+    # step 3 scored from a PRE-durable snapshot: GC must hold — nothing
+    # may be deleted on the evidence of a step that could fail to persist
+    ch.publish(ParamSnapshot.from_tree(3, {"params": toy_params(1)}))
+    v.validate_pending()
+    assert 3 in [r["step"] for r in v.ledger.rows()]
+    assert len(ckpt.list_steps(root)) == n_after_durable    # held
+    assert not control.maybe_gc(v)
+    # selection DID act on the provisional row (reversible decision)
+    assert control.selector.best_step is not None
+    # the durable commit lands: the hold releases and GC runs
+    ckpt.save(root, 3, {"params": toy_params(1)})
+    ch.mark_durable(3)
+    assert control.maybe_gc(v)
+
+
+def test_gc_hold_releases_on_failed_save(tmp_path, ds, baseline_run):
+    root = str(tmp_path / "ck")
+    ch = SnapshotChannel(capacity=8)
+    suite = make_suite(ds, baseline_run)
+    control = ControlPlane(root, ControlConfig(metric="MRR@10",
+                                               keep_top_k=1),
+                           durability=ch.durability)
+    v = AsyncValidator(root, suite, snapshots=ch, controller=control,
+                       ledger_path=str(tmp_path / "ledger.jsonl"))
+    state = {"params": toy_params()}
+    ch.publish(ParamSnapshot.from_tree(1, state))
+    v.validate_pending()
+    assert not control.maybe_gc(v)      # pending: held
+    ch.mark_failed(1, error=RuntimeError("disk died"))
+    assert control.maybe_gc(v)          # failed releases the hold
+
+
+def test_early_stop_acts_on_provisional_rows(tmp_path, ds, baseline_run):
+    """Early stopping is a reversible decision: it fires from snapshot-
+    scored rows without waiting for any durable commit."""
+    root = str(tmp_path / "ck")
+    stop_path = str(tmp_path / "STOP")
+    ch = SnapshotChannel(capacity=16)
+    suite = make_suite(ds, baseline_run)
+    control = ControlPlane(root, ControlConfig(metric="MRR@10",
+                                               early_stop=True,
+                                               patience=2),
+                           stop_path=stop_path, durability=ch.durability)
+    v = AsyncValidator(root, suite, snapshots=ch, controller=control,
+                       ledger_path=str(tmp_path / "ledger.jsonl"))
+    state = {"params": toy_params()}
+    for step in (1, 2, 3, 4):
+        ch.publish(ParamSnapshot.from_tree(step, state))   # never durable
+        v.validate_pending()
+        if control.stopped:
+            break
+    # identical metrics every step -> plateau -> stop, all provisional
+    assert control.stopped
+    assert os.path.exists(stop_path)
+    assert all(ch.durability(r["step"]) == "pending"
+               for r in v.ledger.rows())
+
+
+# ---------------------------------------------------------------------------
+# Ledger byte-identity + provenance surfaces
+# ---------------------------------------------------------------------------
+
+def test_durable_rows_stay_byte_identical(tmp_path, ds, baseline_run):
+    """A run without the hand-off writes EXACTLY the pre-handoff schema:
+    no `handoff` key anywhere, keys byte-for-byte the pre-feature set."""
+    root = str(tmp_path / "ck")
+    ckpt.save(root, 1, {"params": toy_params()})
+    suite = make_suite(ds, baseline_run)
+    path = str(tmp_path / "ledger.jsonl")
+    v = AsyncValidator(root, suite, ledger_path=path)
+    v.validate_pending()
+    with open(path) as f:
+        for line in f:
+            rec = json.loads(line)
+            assert "handoff" not in rec
+            assert set(rec) == {"step", "task", "metrics", "timings",
+                                "subset_size", "engine", "score_dtype"}
+
+
+def test_flatten_rows_exposes_handoff_context():
+    from repro.control.metricspec import flatten_rows
+    rows = [
+        {"step": 1, "task": "default", "metrics": {"MRR@10": 0.5},
+         "engine": "streaming", "score_dtype": "f32"},
+        {"step": 2, "task": "default", "metrics": {"MRR@10": 0.6},
+         "engine": "streaming", "score_dtype": "f32",
+         "handoff": "snapshot"},
+    ]
+    out = flatten_rows(rows, ("default",), with_context=True)
+    ctx = dict((step, c) for step, _, c in out)
+    assert "handoff" not in ctx[1]          # pre-handoff rows unchanged
+    assert ctx[2]["handoff"] == "snapshot"
+
+
+def test_workqueue_publish_source_provenance(tmp_path):
+    from repro.core.workqueue import WorkUnit
+    path = str(tmp_path / "queue.jsonl")
+    q = WorkQueue(path, "supervisor")
+    q.publish([WorkUnit.make(1, "default")], source="snapshot")
+    # idempotent: the watcher's later re-publish of the same key no-ops
+    q.publish([WorkUnit.make(1, "default")])
+    q.publish([WorkUnit.make(2, "default")])
+    state = q.refresh()
+    assert state.units[(1, "default")].source == "snapshot"
+    assert state.units[(2, "default")].source == ""
+    # offline replay folds the same provenance from the raw records
+    replayed = replay(path)
+    assert replayed.units[(1, "default")].source == "snapshot"
+    # the record only carries the key when stamped (byte-compat)
+    with open(path) as f:
+        recs = [json.loads(line) for line in f]
+    unit_recs = [r for r in recs if r.get("kind") == "unit"]
+    assert [("source" in r) for r in unit_recs] == [True, False]
+
+
+def test_fleet_supervisor_publishes_snapshot_units(tmp_path, ds,
+                                                   baseline_run):
+    from repro.launch.fleet import FleetSupervisor
+    root = str(tmp_path / "ck")
+    os.makedirs(root)
+    spool = SnapshotSpool(str(tmp_path / "sp"))
+    sup = FleetSupervisor(root, str(tmp_path / "queue.jsonl"),
+                          ("default",),
+                          snapshots=SnapshotSpool(spool.root))
+    state = {"params": toy_params()}
+    snap = ParamSnapshot.from_tree(1, state)
+    # the trainer spills step 1 BEFORE any durable checkpoint exists
+    spool.publish(1, snap.leaves, snap.treedef_hex)
+    assert sup.publish_pending() == 1
+    st = sup.queue.refresh().units[(1, "default")]
+    assert st.source == "snapshot"
+    # the durable commit arrives later: watcher discovery collapses in the
+    # fold (no duplicate unit), and a fleet worker scores from the spool
+    ckpt.save(root, 1, state)
+    assert sup.publish_pending() == 0
+    suite = make_suite(ds, baseline_run)
+    worker = ValidatorWorker(
+        root, suite,
+        ledger=ValidationLedger(str(tmp_path / "queue.jsonl"),
+                                expected_tasks=suite.task_names),
+        queue=WorkQueue(str(tmp_path / "queue.jsonl"), "w0"),
+        worker_id="w0", snapshots=SnapshotSpool(spool.root))
+    assert worker.run_once() == 1
+    rows = worker.ledger.rows()
+    assert rows[0]["handoff"] == "snapshot"
+    assert rows[0]["worker_id"] == "w0"
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: trainer publishes, validator scores pre-durable
+# ---------------------------------------------------------------------------
+
+def test_trainer_handoff_end_to_end(tmp_path, ds, baseline_run):
+    """Trainer._save publishes the host copy the moment it lands; the
+    validator's verdict from it is bit-identical to re-validating the
+    durable checkpoint afterwards."""
+    from repro.train import optim
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    ch = SnapshotChannel(capacity=8)
+    root = str(tmp_path / "ck")
+    tcfg = TrainerConfig(total_steps=4, ckpt_every=2, ckpt_dir=root,
+                         log_every=2, async_save=True, snapshots=ch)
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        loss = jnp.mean(jnp.square(pred - batch["y"]))
+        return loss, {"mse": loss}
+
+    def batch_for(step, n=8):
+        rng = np.random.default_rng(step)
+        x = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+        return {"x": x, "y": x @ jnp.asarray([3.0, -2.0])}
+
+    trainer = Trainer(tcfg, loss_fn, optim.adamw(5e-2),
+                      {"w": jnp.zeros((2,))}, batch_for)
+    trainer.run()
+    # every saved step was published and marked durable via the hooks
+    assert ch.durability(2) == "durable"
+    assert ch.durability(4) == "durable"
+    # the published snapshots reconstruct the committed checkpoints exactly
+    for step in (2, 4):
+        snap = ch.get(step)
+        if snap is None:
+            continue                    # retired already (validated race)
+        state, _ = ckpt.restore(root, step)
+        got = snap.state()
+        assert np.array_equal(np.asarray(got["params"]["w"]),
+                              np.asarray(state["params"]["w"]))

@@ -522,9 +522,9 @@ def test_two_worker_fleet_trace_attribution(ds, tmp_path):
 
 def test_lifecycle_vocabulary_is_stable():
     assert LIFECYCLE_STAGES == (
-        "produced", "discovered", "published", "claimed", "store_build",
-        "staged", "encoded", "scored", "recorded", "selected", "promoted",
-        "served")
+        "produced", "snapshotted", "discovered", "published", "claimed",
+        "store_build", "staged", "encoded", "scored", "recorded",
+        "selected", "promoted", "served")
 
 
 def test_obs_report_prints_verdict_percentiles(capsys):
